@@ -1,0 +1,39 @@
+"""ESE end-to-end estimates (Fig 4(a) pipeline) over real dry-run cells:
+latency → operational + embodied energy → carbon-aware bill."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core.ese import energy, estimator
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+
+
+def run() -> list[tuple]:
+    if not os.path.exists(RESULTS):
+        return [("ese_estimates_missing", 0.0, "needs results/dryrun.json")]
+    recs = json.load(open(RESULTS))
+    usable = [r for r in recs.values()
+              if "roofline" in r and r.get("tag") == "baseline"]
+    head = energy.train_latency_head(usable, steps=500)
+    rows = [("ese_latency_head_mape", head[2],
+             "learned latency model vs synthetic measurements")]
+    for key in ("mixtral-8x7b|train_4k|single|baseline",
+                "llama4-maverick-400b-a17b|train_4k|single|baseline",
+                "rwkv6-1.6b|decode_32k|single|baseline"):
+        r = recs.get(key)
+        if r is None or "roofline" not in r:
+            continue
+        est = estimator.estimate_task(r, n_steps=1000, latency_head=head,
+                                      net_demand_quantile=0.3)
+        est_g = estimator.estimate_task(r, n_steps=1000, latency_head=head,
+                                        net_demand_quantile=0.3,
+                                        recycled_optin=True)
+        rows.append((
+            f"ese_bill_{r['arch']}_{r['shape']}", est.bill_usd,
+            f"usd_per_1k_steps op={est.operational_j/3.6e6:.1f}kWh "
+            f"emb={est.embodied_j/3.6e6:.1f}kWh green=${est_g.bill_usd:.0f}",
+        ))
+    return rows

@@ -1,0 +1,22 @@
+"""Fig 7: the ESE energy-source predictor (2-layer LSTM, quantile heads)
+on CAISO-like wind generation."""
+from __future__ import annotations
+
+from repro.core.ese import predictor
+from repro.core.power import traces
+
+
+def run() -> list[tuple]:
+    tr = traces.make_trace(days=10, seed=2)
+    cfg = predictor.PredictorConfig(steps=300, hidden=48, context=24)
+    params, norms, metrics = predictor.train(tr, cfg)
+    return [
+        ("fig7_pinball_test", metrics["pinball_test"],
+         "quantile_loss (7 quantiles x 3 horizons x 2 targets)"),
+        ("fig7_mae_wind_5min_mw", metrics["mae_mw_wind_5min"],
+         "MW mean-abs-error at +5min (P50)"),
+        ("fig7_mae_net_5min_mw", metrics["mae_mw_net_5min"],
+         "MW mean-abs-error at +5min (P50)"),
+        ("fig7_coverage95_renewables", metrics["coverage95_renew"],
+         "empirical coverage of [P2.5,P97.5] band"),
+    ]

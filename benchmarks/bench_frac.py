@@ -1,0 +1,78 @@
+"""FRAC benchmarks: Fig 2(c) utilization, Fig 2(d) capacity↔endurance,
+Fig 6 RBER, and codec/kernel throughput."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.frac import codec, policy, wear
+
+
+def bench_fig2c_utilization() -> list[tuple]:
+    rows = []
+    for r in codec.utilization_table():
+        rows.append((
+            f"fig2c_util_m{r['m']}", r["utilization"],
+            f"alpha={r['alpha']} bits={r['bits']} bpc={r['bits_per_cell']:.2f}",
+        ))
+    return rows
+
+
+def bench_fig2d_capacity_endurance() -> list[tuple]:
+    rows = []
+    for m in wear.M_LADDER:
+        rows.append((
+            f"fig2d_m{m}", wear.page_capacity_bytes(m),
+            f"page_bytes endurance={wear.endurance_ratio(m):.1f}x "
+            f"read_iters={wear.read_iterations(m)} "
+            f"pulses={wear.program_pulses(m)}",
+        ))
+    return rows
+
+
+def bench_fig6_rber() -> list[tuple]:
+    rows = []
+    for m in (2, 3, 4):
+        rows.append((
+            f"fig6_rber_m{m}_6k", wear.rber(m, 6000) * 100,
+            "percent (paper: 0.6/0.9/1.4)",
+        ))
+    return rows
+
+
+def bench_lifetime_gain() -> list[tuple]:
+    frac = policy.simulate_lifetime(wear.RecycledChip(64, seed=1),
+                                    policy.DegradationPolicy())
+    base = policy.simulate_lifetime(wear.RecycledChip(64, seed=1), None)
+    life = lambda tr: max((t for t, c, _ in tr if c > 0), default=0)
+    return [("frac_lifetime_gain", life(frac) / max(life(base), 1),
+             f"x_over_fixed_tlc frac={life(frac):.0f} base={life(base):.0f}")]
+
+
+def bench_codec_throughput() -> list[tuple]:
+    from repro.kernels.frac_pack import ops as fops
+
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1 << 20,)),
+                    jnp.float32)
+    blob = fops.encode_tensor(x, kbits=8)          # warmup/compile
+    jnp.asarray(blob["words"]).block_until_ready()
+    t0 = time.perf_counter()
+    n = 3
+    for _ in range(n):
+        blob = fops.encode_tensor(x, kbits=8)
+        jnp.asarray(blob["words"]).block_until_ready()
+    dt = (time.perf_counter() - t0) / n
+    ratio = x.size * 4 / codec.compressed_bytes(
+        {k: blob[k] for k in ("words", "scales")} | {"meta": blob["meta"]})
+    return [("frac_pack_1M_f32", dt * 1e6,
+             f"us_per_call ratio={ratio:.2f}x (interpret-mode CPU)")]
+
+
+def run() -> list[tuple]:
+    out = []
+    for fn in (bench_fig2c_utilization, bench_fig2d_capacity_endurance,
+               bench_fig6_rber, bench_lifetime_gain, bench_codec_throughput):
+        out.extend(fn())
+    return out

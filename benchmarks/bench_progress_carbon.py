@@ -1,0 +1,30 @@
+"""Fig 5 benchmarks: forward progress under CAISO-like supply (right)
+and the carbon Pareto across accelerator fleets (left)."""
+from __future__ import annotations
+
+from repro.core.carbon import explorer
+from repro.core.power import nonvolatile, traces
+
+
+def run() -> list[tuple]:
+    tr = traces.make_trace(days=7, seed=0)
+    sup = traces.datacenter_supply(tr) / 30.0
+    rows = []
+    base = None
+    for mode in ("volatile", "nv-partial", "verdant"):
+        sim = nonvolatile.simulate_progress(sup, mode=mode)
+        if mode == "volatile":
+            base = sim["final_steps"]
+        rows.append((
+            f"fig5r_progress_{mode}", sim["final_steps"],
+            f"steps_week rel={sim['final_steps']/base:.3f} "
+            f"outages={sim['outages']} rollover={sim['rollover_steps']:.0f}",
+        ))
+    for r in explorer.pareto(sup):
+        rows.append((
+            f"fig5l_{r['name'].split()[0].lower()}",
+            r["rel_carbon_per_progress"],
+            f"rel_carbon_per_progress embodied={r['embodied_kg']:.0f}kg "
+            f"op={r['operational_kg']:.0f}kg progress={r['forward_progress']:.0f}",
+        ))
+    return rows

@@ -1,0 +1,43 @@
+"""Roofline table from the committed 512-device dry-run sweep
+(results/dryrun.json) — the §Roofline deliverable in benchmark form."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+
+
+def run() -> list[tuple]:
+    if not os.path.exists(RESULTS):
+        return [("roofline_missing", 0.0,
+                 "run: python -m repro.launch.dryrun --all")]
+    recs = json.load(open(RESULTS))
+    rows = []
+    worst = (None, 1.0)
+    most_coll = (None, 0.0)
+    for key, r in sorted(recs.items()):
+        if "roofline" not in r or r.get("tag") != "baseline":
+            continue
+        if r["mesh"] != "single":
+            continue                        # roofline table is single-pod
+        rl = r["roofline"]
+        name = f"roofline_{r['arch']}_{r['shape']}"
+        frac = rl["roofline_fraction"]
+        rows.append((
+            name, frac,
+            f"dom={rl['dominant']} tc={rl['t_compute_s']:.3g}s "
+            f"tm={rl['t_memory_s']:.3g}s tx={rl['t_collective_s']:.3g}s "
+            f"useful={rl['useful_compute_ratio']:.2f} "
+            f"mem={r['memory']['peak_gib_per_device']:.1f}GiB",
+        ))
+        if frac < worst[1]:
+            worst = (name, frac)
+        coll_share = rl["t_collective_s"] / max(rl["step_time_bound_s"], 1e-12)
+        if coll_share > most_coll[1]:
+            most_coll = (name, coll_share)
+    rows.append(("roofline_worst_cell", worst[1], worst[0] or "n/a"))
+    rows.append(("roofline_most_collective_bound", most_coll[1],
+                 most_coll[0] or "n/a"))
+    return rows

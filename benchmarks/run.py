@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows.  Mapping to the paper:
+
+  bench_frac             Fig 2(c), Fig 2(d), Fig 6, codec throughput
+  bench_progress_carbon  Fig 5 right (forward progress), Fig 5 left (Pareto)
+  bench_ese_wind         Fig 7 (LSTM wind prediction)
+  bench_kernels          §II-A NTT / SHA3 workloads
+  bench_roofline         EXPERIMENTS §Roofline table (from the dry-run)
+  bench_ese_estimates    Fig 4(a) estimator pipeline end-to-end
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_ese_estimates,
+        bench_ese_wind,
+        bench_frac,
+        bench_kernels,
+        bench_progress_carbon,
+        bench_roofline,
+    )
+
+    modules = [
+        ("frac", bench_frac),
+        ("progress_carbon", bench_progress_carbon),
+        ("ese_wind", bench_ese_wind),
+        ("kernels", bench_kernels),
+        ("roofline", bench_roofline),
+        ("ese_estimates", bench_ese_estimates),
+    ]
+    print("name,value,derived")
+    failures = 0
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            for row in mod.run():
+                n, v, d = row
+                print(f"{n},{v:.6g},{d}")
+        except Exception as e:  # keep the harness running
+            failures += 1
+            print(f"{name}_FAILED,0,{type(e).__name__}: {e}")
+        print(f"_section_{name}_seconds,{time.time()-t0:.1f},wall", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""End-to-end driver: carbon-aware, fault-tolerant training under a
+CAISO-like renewable supply trace.
+
+    PYTHONPATH=src python examples/train_carbon_aware.py             # smoke
+    PYTHONPATH=src python examples/train_carbon_aware.py --preset 100m
+
+The 100m preset is the brief's "~100M params, a few hundred steps"
+configuration (hours on this 1-core CPU container; minutes on real
+hardware) — the smoke preset exercises the identical code path at toy
+scale.  Demonstrates: power-aware pause/derate, FRAC per-step snapshots
+(nonvolatile tier), preemption-safe exit, checkpoint resume, and the
+end-of-run ESE energy/bill report.
+"""
+import argparse
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs import get_config, get_tiny
+from repro.core.ese import billing
+from repro.core.power import traces
+from repro.core.power.scheduler import CarbonAwareScheduler, SchedulerConfig
+from repro.train.loop import Trainer, TrainerConfig
+
+
+def build_config(preset: str):
+    if preset == "smoke":
+        return get_tiny("llama3.2-3b"), dict(total_steps=40, global_batch=4,
+                                             seq_len=32)
+    if preset == "100m":
+        cfg = get_config("llama3.2-3b").replace(
+            name="llama3.2-100m", num_layers=8, d_model=768, num_heads=12,
+            num_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32000,
+            remat="none",
+        )
+        return cfg, dict(total_steps=300, global_batch=8, seq_len=256)
+    raise SystemExit(f"unknown preset {preset}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "100m"])
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    mcfg, dims = build_config(args.preset)
+    ckpt = args.ckpt or tempfile.mkdtemp(prefix="verdant_carbon_")
+
+    # one power-trace interval per 4 steps; CAISO-like supply starting
+    # at noon (the midnight start would pause the whole smoke run —
+    # which is correct scheduler behaviour, but a boring demo)
+    grid = traces.make_trace(days=2, seed=0)
+    supply = (traces.datacenter_supply(grid) / 30.0)[traces.STEPS_PER_DAY // 2:]
+    n_params = None
+
+    tcfg = TrainerConfig(
+        ckpt_dir=ckpt, ckpt_every=max(10, dims["total_steps"] // 4),
+        snapshot_mode="frac8", power_trace=supply,
+        steps_per_power_interval=4, lr=1e-3, **dims,
+    )
+    sch = CarbonAwareScheduler(SchedulerConfig(use_forecast=False))
+    print(f"== {mcfg.name}: {dims['total_steps']} steps, "
+          f"carbon-aware, ckpt={ckpt} ==")
+    out = Trainer(mcfg, tcfg, scheduler=sch).run()
+
+    from repro.models import model
+    n_params = model.count_params(mcfg)
+    losses = [m["loss"] for m in out["metrics"]]
+    print(f"params:        {n_params/1e6:.1f}M")
+    print(f"steps run:     {out['final_step'] - out['paused_steps']} "
+          f"(paused {out['paused_steps']} for low supply)")
+    if losses:
+        print(f"loss:          {losses[0]:.3f} -> {losses[-1]:.3f}")
+    print(f"stragglers:    {out['stragglers']}")
+
+    # resume demonstration: extend the run by 25%
+    tcfg2 = TrainerConfig(
+        ckpt_dir=ckpt, ckpt_every=tcfg.ckpt_every,
+        total_steps=int(dims["total_steps"] * 1.25),
+        global_batch=dims["global_batch"], seq_len=dims["seq_len"], lr=1e-3,
+    )
+    out2 = Trainer(mcfg, tcfg2).run()
+    print(f"resumed ->     step {out2['final_step']} "
+          f"loss {out2['final_loss']:.3f}")
+
+    # ESE bill for the run (rough: mean step time x steps)
+    mean_dt = float(np.mean([m["step_time_s"] for m in out2["metrics"]]))
+    kwh = mean_dt * len(out2["metrics"]) * 150.0 / 3.6e6   # 150W host draw
+    bill = billing.carbon_aware(kwh * 3.6e6, kwh * 3.6e5,
+                                net_demand_quantile=0.3, derate_optin=True)
+    print(f"ESE bill:      ${bill.usd:.4f} "
+          f"(surge={bill.breakdown['surge']:.2f}, derate opt-in)")
+
+
+if __name__ == "__main__":
+    main()

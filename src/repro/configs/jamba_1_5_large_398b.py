@@ -1,0 +1,46 @@
+"""jamba-1.5-large-398b — hybrid Mamba+attention (1:7) with MoE.
+
+[arXiv:2403.19887; hf] 72L d_model=8192 64H (GQA kv=8) d_ff=24576
+vocab=65536, MoE 16e top-2.  Attention every 8th layer (1:7
+attn:mamba interleave), MoE MLP every 2nd layer.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    num_experts=16,
+    experts_per_token=2,
+    moe_interleave=2,
+    attn_period=8,
+    mamba_d_state=16,
+    mamba_d_conv=4,
+    mamba_expand=2,
+    rope_theta=0.0,          # jamba attention uses no positional encoding
+    source="arXiv:2403.19887; hf",
+)
+
+TINY = CONFIG.replace(
+    name="jamba-1.5-large-tiny",
+    num_layers=8,          # one full period: 7 mamba + 1 attention
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    num_experts=4,
+    experts_per_token=2,
+    moe_interleave=2,
+    attn_period=8,
+    mamba_d_state=8,
+    mamba_dt_rank=8,
+    remat="none",
+)

@@ -1,0 +1,42 @@
+"""llama4-maverick-400b-a17b — 128-expert top-1 MoE, early fusion.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified] 48L d_model=5120 40H
+(GQA kv=8) d_ff=8192 vocab=202048, MoE 128e top-1.
+
+Note (DESIGN.md §4): MoE on every layer at 128 experts would be ~773B
+params; Maverick interleaves MoE every 2nd layer (moe_interleave=2),
+matching the published ~400B total / ~17B active budget.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    num_experts=128,
+    experts_per_token=1,
+    moe_interleave=2,
+    rope_theta=500_000.0,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
+)
+
+TINY = CONFIG.replace(
+    name="llama4-maverick-tiny",
+    num_layers=4,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=96,
+    vocab_size=256,
+    num_experts=8,
+    experts_per_token=1,
+    moe_interleave=2,
+    remat="none",
+)

@@ -1,0 +1,34 @@
+"""minitron-8b — pruned nemotron dense model.
+
+[arXiv:2407.14679; hf] 32L d_model=4096 32H (GQA kv=8) d_ff=16384
+vocab=256000. Squared-ReLU MLP inherited from Nemotron.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=256000,
+    mlp_activation="relu2",
+    gated_mlp=False,
+    rope_theta=10_000.0,
+    source="arXiv:2407.14679; hf",
+)
+
+TINY = CONFIG.replace(
+    name="minitron-8b-tiny",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    remat="none",
+)

@@ -1,0 +1,34 @@
+"""nemotron-4-15b — dense, GQA, squared-ReLU MLP.
+
+[arXiv:2402.16819; unverified] 32L d_model=6144 48H (GQA kv=8)
+d_ff=24576 vocab=256000.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b",
+    family="dense",
+    num_layers=32,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=256000,
+    mlp_activation="relu2",
+    gated_mlp=False,
+    rope_theta=10_000.0,
+    source="arXiv:2402.16819; unverified",
+)
+
+TINY = CONFIG.replace(
+    name="nemotron-4-15b-tiny",
+    num_layers=2,
+    d_model=96,
+    num_heads=6,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=192,
+    vocab_size=256,
+    remat="none",
+)

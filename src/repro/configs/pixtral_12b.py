@@ -1,0 +1,35 @@
+"""pixtral-12b — pixtral-ViT frontend (stub) + mistral-nemo backbone.
+
+[hf:mistralai/Pixtral-12B-2409; unverified] 40L d_model=5120 32H
+(GQA kv=8) d_ff=14336 vocab=131072.  Per the brief the vision frontend
+is a STUB: ``input_specs()`` provides precomputed patch embeddings
+(batch, seq, d_model) for train/prefill; decode consumes tokens.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b",
+    family="vlm",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=131072,
+    input_mode="embeddings",
+    rope_theta=1_000_000.0,
+    source="hf:mistralai/Pixtral-12B-2409; unverified",
+)
+
+TINY = CONFIG.replace(
+    name="pixtral-12b-tiny",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    remat="none",
+)

@@ -1,0 +1,33 @@
+"""rwkv6-1.6b ("Finch") — attention-free RNN with data-dependent decay.
+
+[arXiv:2404.05892; unverified] 24L d_model=2048 (attn-free) d_ff=7168
+vocab=65536.  Heads of 64; decay is data-dependent via a low-rank MLP.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=7168,
+    vocab_size=65536,
+    rwkv_head_dim=64,
+    rwkv_decay_lora=64,
+    gated_mlp=False,
+    source="arXiv:2404.05892; unverified",
+)
+
+TINY = CONFIG.replace(
+    name="rwkv6-1.6b-tiny",
+    num_layers=2,
+    d_model=64,
+    d_ff=128,
+    vocab_size=256,
+    rwkv_head_dim=16,
+    rwkv_decay_lora=8,
+    remat="none",
+)

@@ -1,0 +1,33 @@
+"""stablelm-12b — dense, stablelm-2 style parallel attention/MLP block.
+
+[hf:stabilityai/stablelm-2-1_6b; hf] 40L d_model=5120 32H (GQA kv=8)
+d_ff=13824 vocab=100352.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-12b",
+    family="dense",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=160,
+    d_ff=13824,
+    vocab_size=100352,
+    parallel_block=True,
+    rope_theta=10_000.0,
+    source="hf:stabilityai/stablelm-2-1_6b; hf",
+)
+
+TINY = CONFIG.replace(
+    name="stablelm-12b-tiny",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    remat="none",
+)

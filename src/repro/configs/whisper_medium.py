@@ -1,0 +1,45 @@
+"""whisper-medium — encoder/decoder speech model, conv frontend stubbed.
+
+[arXiv:2212.04356; unverified] 24L(dec) + 24L(enc) d_model=1024 16H
+(kv=16 -> MHA) d_ff=4096 vocab=51865.  Per the brief the conv/audio
+frontend is a STUB: ``input_specs()`` provides precomputed frame
+embeddings (batch, 1500, d_model).  Real Whisper caps decoder context at
+448 tokens; the assigned 32k decode cell is exercised structurally
+(DESIGN.md §4).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="audio",
+    num_layers=24,
+    encoder_layers=24,
+    encoder_seq=1500,
+    cross_attention=True,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51865,
+    mlp_activation="gelu",
+    gated_mlp=False,
+    input_mode="embeddings",
+    tie_embeddings=True,     # whisper ties decoder embed and lm head
+    rope_theta=0.0,          # whisper uses learned/sinusoidal positions
+    source="arXiv:2212.04356; unverified",
+)
+
+TINY = CONFIG.replace(
+    name="whisper-medium-tiny",
+    num_layers=2,
+    encoder_layers=2,
+    encoder_seq=32,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    remat="none",
+)

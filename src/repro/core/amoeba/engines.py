@@ -1,0 +1,131 @@
+"""Amoeba reconfigurable engines, TPU-native (paper §II-A, Fig 1).
+
+The FeFET crossbar PEs map onto TPU compute units as follows
+(DESIGN.md §2):
+
+  APE (associative: LUT, bitwise-cascade ADD)  -> VPU vector int ops
+  MPE (crossbar MVM; SHIFT recoded as MVM)     -> MXU matmuls
+  CPE (in-array logic: AND/XOR on 2×N arrays)  -> VPU logical ops
+  APE+MPE composition for MUL                  -> int mul via add/shift
+
+The paper's SHIFT→MVM trick — pre-coding a cyclic permutation matrix
+onto the crossbar — is implemented verbatim (``cyclic_permute_mvm``) and
+used by the NTT engine where MXU matmul beats lane-crossing gathers.
+``dispatch`` is the PE-level reconfiguration: one substrate, three
+workload families (NTT / SHA3 / conv), which is the embodied-carbon
+amortization argument of Fig 5(left).
+"""
+from __future__ import annotations
+
+from enum import Enum
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+class Engine(Enum):
+    APE = "associative"
+    MPE = "multiplication"
+    CPE = "computing"
+
+
+# --- MPE ---------------------------------------------------------------------
+
+
+def permutation_matrix(n: int, shift: int) -> jax.Array:
+    """P such that x @ P == roll(x, shift) — the paper's pre-coded
+    cyclic-permutation crossbar, generalized to any cyclic permutation."""
+    idx = (jnp.arange(n) - shift) % n
+    return jax.nn.one_hot(idx, n, dtype=jnp.float32).T
+
+
+def cyclic_permute_mvm(x: jax.Array, shift: int) -> jax.Array:
+    """SHIFT as MVM (paper: >40% of NTT ops are SHIFTs).  On TPU the MXU
+    executes this as a matmul, avoiding lane-crossing gathers for small
+    widths; validated against jnp.roll.  fp32 matrix keeps integer
+    operands < 2^24 exact (the MXU runs it as bf16x3 passes)."""
+    n = x.shape[-1]
+    p = permutation_matrix(n, shift)
+    return jnp.einsum("...n,nm->...m", x.astype(jnp.float32), p).astype(x.dtype)
+
+
+def mpe_mvm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Weight-stationary crossbar MVM == MXU matmul."""
+    return jnp.einsum("...n,nm->...m", x, w)
+
+
+# --- APE ---------------------------------------------------------------------
+
+
+def ape_lut(keys: jax.Array, table_keys: jax.Array, table_vals: jax.Array):
+    """CAM-style associative lookup: parallel compare against all stored
+    words, select matched value (match-line -> onehot select)."""
+    match = (keys[..., None] == table_keys[None, :])
+    return jnp.einsum("...t,tv->...v", match.astype(table_vals.dtype), table_vals)
+
+
+def ape_add(a: jax.Array, b: jax.Array, bits: int = 32) -> jax.Array:
+    """Bitwise search-based addition cascade (paper: APE ADD).  The TPU
+    realization keeps the carry-cascade structure but runs it as vector
+    ops; used where the int ALU path would leave the MXU idle."""
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+
+    def body(i, st):
+        a, b = st
+        carry = a & b
+        a = a ^ b
+        b = carry << 1
+        return a, b
+
+    a, b = jax.lax.fori_loop(0, bits, body, (a, b))
+    return a
+
+
+# --- CPE ---------------------------------------------------------------------
+
+
+def cpe_logic(a: jax.Array, b: jax.Array, op: str) -> jax.Array:
+    """2×N-array in-crossbar logic -> VPU logical ops."""
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    if op == "and":
+        return a & b
+    if op == "or":
+        return a | b
+    if op == "xor":
+        return a ^ b
+    if op == "not":
+        return ~a
+    raise ValueError(op)
+
+
+# --- APE+MPE composition: MUL ---------------------------------------------------
+
+
+def amoeba_mul(a: jax.Array, b_const: int, bits: int = 16) -> jax.Array:
+    """N-bit MUL by a constant as SHIFT(MVM) + ADD(APE) partial products
+    (paper: combining APE and MPE replaces CryptoPIM's implicit-select
+    scheme)."""
+    acc = jnp.zeros_like(a, dtype=jnp.uint32)
+    av = a.astype(jnp.uint32)
+    for i in range(bits):
+        if (b_const >> i) & 1:
+            acc = ape_add(acc, av << i)
+    return acc
+
+
+# --- PE-level reconfiguration -----------------------------------------------------
+
+WORKLOAD_ENGINES = {
+    "ntt": (Engine.MPE, Engine.APE),       # MVM butterflies + ADD/LUT
+    "sha3": (Engine.CPE, Engine.APE),      # XOR/AND rounds + rotations
+    "conv": (Engine.MPE,),                 # pure MVM
+}
+
+
+def dispatch(workload: str) -> tuple[Engine, ...]:
+    if workload not in WORKLOAD_ENGINES:
+        raise KeyError(f"unknown workload {workload!r}")
+    return WORKLOAD_ENGINES[workload]

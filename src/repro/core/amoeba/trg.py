@@ -1,0 +1,45 @@
+"""Amoeba TRG — counter-corrected random bit generation (paper §II-A).
+
+The FeFET device's stochastic switching biases toward '0'; the paper
+tracks output probabilities over consecutive 256-bit segments with an
+8-bit counter and feeds the count back into the write voltage for the
+next segment.  The entropy physics doesn't transfer to TPU, but the
+bias-correction *scheme* does: we model a biased physical source and
+apply the same segment-counter feedback, then use the stream for
+stochastic rounding in the FRAC quantizer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+SEGMENT_BITS = 256
+
+
+def biased_bits(key: jax.Array, n_segments: int, p0: float = 0.62) -> jax.Array:
+    """The raw 'device': '0'-biased bits, (n_segments, 256) uint8."""
+    u = jax.random.uniform(key, (n_segments, SEGMENT_BITS))
+    return (u > p0).astype(jnp.uint8)
+
+
+def counter_corrected_bits(key: jax.Array, n_segments: int,
+                           p0: float = 0.62, gain: float = 0.9) -> jax.Array:
+    """Bias-tracked generation: an 8-bit counter of ones in segment t
+    adjusts the 'write voltage' (here: threshold) for segment t+1."""
+    keys = jax.random.split(key, n_segments)
+
+    def seg(thresh, k):
+        u = jax.random.uniform(k, (SEGMENT_BITS,))
+        bits = (u > thresh).astype(jnp.uint8)
+        ones = jnp.clip(bits.sum(), 0, 255).astype(jnp.float32)  # 8-bit counter
+        err = ones / SEGMENT_BITS - 0.5
+        thresh = jnp.clip(thresh + gain * err, 0.05, 0.95)
+        return thresh, bits
+
+    _, out = lax.scan(seg, jnp.float32(p0), keys)
+    return out
+
+
+def bias(bits: jax.Array) -> float:
+    return float(jnp.mean(bits.astype(jnp.float32)))

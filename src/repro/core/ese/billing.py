@@ -1,0 +1,58 @@
+"""ESE billing policies (paper §II-C, Fig 4(a) final stage).
+
+The data center prices a task from (E_ope, E_emb, net-demand forecast):
+users that run when renewables are abundant, accept degraded QoS, or opt
+into recycled hardware pay less — the paper's incentive mechanism.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+KWH = 3.6e6
+
+
+@dataclass(frozen=True)
+class Bill:
+    usd: float
+    breakdown: dict
+
+
+BASE_USD_PER_KWH = 0.18
+EMBODIED_USD_PER_KWH = 0.26     # embodied energy priced above operational
+SURGE_FACTOR = 2.5              # at max forecast net demand
+GREEN_DISCOUNT = 0.35           # recycled-hardware opt-in
+DERATE_DISCOUNT = 0.20          # accepts scheduler derating
+
+
+def flat(operational_j: float, embodied_j: float) -> Bill:
+    usd = (operational_j * BASE_USD_PER_KWH
+           + embodied_j * EMBODIED_USD_PER_KWH) / KWH
+    return Bill(usd, {"policy": "flat"})
+
+
+def carbon_aware(
+    operational_j: float,
+    embodied_j: float,
+    *,
+    net_demand_quantile: float,
+    recycled_optin: bool = False,
+    derate_optin: bool = False,
+) -> Bill:
+    """net_demand_quantile ∈ [0,1]: forecast net demand at task start
+    (P50, normalized to the week's range) from the energy-source
+    predictor — high net demand = little surplus renewable = surge."""
+    q = float(np.clip(net_demand_quantile, 0.0, 1.0))
+    surge = 1.0 + (SURGE_FACTOR - 1.0) * q
+    op_rate = BASE_USD_PER_KWH * surge
+    emb_rate = EMBODIED_USD_PER_KWH
+    if recycled_optin:
+        emb_rate *= (1.0 - GREEN_DISCOUNT)
+    usd = (operational_j * op_rate + embodied_j * emb_rate) / KWH
+    if derate_optin:
+        usd *= (1.0 - DERATE_DISCOUNT)
+    return Bill(usd, {
+        "policy": "carbon_aware", "surge": surge,
+        "recycled_optin": recycled_optin, "derate_optin": derate_optin,
+    })

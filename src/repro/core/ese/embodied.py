@@ -1,0 +1,65 @@
+"""ESE embodied-energy model — the paper's linear equation, verbatim:
+
+    E_emb(task) = Σ_{i ∈ X} TBE_i · latency_i / lifetime_i
+
+X = hardware units used by the task; TBE covers production/manufacture,
+transport, use & maintenance, and recycling stages.  Recycled units
+carry a discounted TBE (they amortize a footprint already mostly spent),
+which is what makes the FRAC storage tier and recycled fleets pay off.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro import hw
+
+
+@dataclass(frozen=True)
+class HardwareUnit:
+    name: str
+    tbe_j: float                 # total embodied energy (J) over lifetime
+    lifetime_s: float
+    recycled: bool = False
+
+    @property
+    def effective_tbe_j(self) -> float:
+        return self.tbe_j * (hw.RECYCLED_TBE_DISCOUNT if self.recycled else 1.0)
+
+    def embodied_j(self, occupancy_s: float) -> float:
+        """TBE_i · latency_i / lifetime_i."""
+        return self.effective_tbe_j * occupancy_s / self.lifetime_s
+
+
+def tpu_chip(recycled: bool = False) -> HardwareUnit:
+    return HardwareUnit("tpu-v5e", hw.CHIP_TBE_J, hw.CHIP_LIFETIME_S, recycled)
+
+
+def flash_tb(recycled: bool = True) -> HardwareUnit:
+    # LCA of NAND flash ([11]): ~1.5 GJ embodied per TB; recycled chips in
+    # the FRAC tier carry the discount.
+    return HardwareUnit("nand-tb", 1.5e9, 4 * 365 * 24 * 3600.0, recycled)
+
+
+@dataclass
+class TaskFootprint:
+    """Accumulates a user task's operational + embodied energy."""
+    operational_j: float = 0.0
+    embodied_j: float = 0.0
+    by_unit: dict = field(default_factory=dict)
+
+    def charge(self, unit: HardwareUnit, occupancy_s: float,
+               operational_j: float = 0.0) -> None:
+        e = unit.embodied_j(occupancy_s)
+        self.embodied_j += e
+        self.operational_j += operational_j
+        u = self.by_unit.setdefault(unit.name, {"embodied_j": 0.0,
+                                                "operational_j": 0.0})
+        u["embodied_j"] += e
+        u["operational_j"] += operational_j
+
+    @property
+    def total_j(self) -> float:
+        return self.operational_j + self.embodied_j
+
+    def co2_kg(self, grid_kg_per_kwh: float = 0.24) -> float:
+        return self.total_j / 3.6e6 * grid_kg_per_kwh

@@ -1,0 +1,63 @@
+"""ESE front door: estimate a task before running it (paper Fig 4(a)).
+
+The paper's hardware estimator compiles user source and extracts
+static + runtime features; on TPU the compiled XLA artifact *is* the
+static feature set (DESIGN.md §2).  Flow:
+
+  (arch, shape, mesh) -> dry-run record -> latency (white-box roofline
+  + learned head) -> operational energy -> embodied energy -> bill.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.ese import billing, embodied, energy
+
+
+@dataclass(frozen=True)
+class Estimate:
+    latency_s: float
+    latency_learned_s: float
+    operational_j: float
+    embodied_j: float
+    bill_usd: float
+    detail: dict
+
+
+def estimate_task(
+    record: dict,
+    *,
+    n_steps: int,
+    latency_head=None,
+    net_demand_quantile: float = 0.5,
+    recycled_optin: bool = False,
+) -> Estimate:
+    """record: one dry-run cell (launch/dryrun.py output)."""
+    rl = record["roofline"]
+    chips = int(rl["chips"])
+    step_s = float(rl["step_time_bound_s"])
+    if latency_head is not None:
+        params, norm, _ = latency_head
+        step_learned = energy.predict_latency(params, norm, record)
+    else:
+        step_learned = step_s
+
+    se = energy.operational_step_energy(rl, chips)
+    task_s = step_learned * n_steps
+    op_j = se.step_j / max(step_s, 1e-12) * step_learned * n_steps
+
+    fp = embodied.TaskFootprint()
+    fp.charge(embodied.tpu_chip(recycled_optin), task_s * chips, op_j)
+    bill = billing.carbon_aware(
+        fp.operational_j, fp.embodied_j,
+        net_demand_quantile=net_demand_quantile,
+        recycled_optin=recycled_optin,
+    )
+    return Estimate(
+        latency_s=step_s * n_steps,
+        latency_learned_s=task_s,
+        operational_j=fp.operational_j,
+        embodied_j=fp.embodied_j,
+        bill_usd=bill.usd,
+        detail={"step_energy": se.breakdown, "bill": bill.breakdown},
+    )

@@ -1,0 +1,213 @@
+"""FRAC — fractional NAND cell coding, bit-exact (paper §II-B).
+
+A FRAC cell holds one of m Vth states, m ∈ [2, 2^n]; α cells jointly
+store b = ⌊log2(m^α)⌋ bits by radix conversion (two 3-state cells →
+3 bits, Fig 2(b)).  The code is **lossless on data bits**: b-bit
+codewords map to α base-m digits and back.  The capacity cost is the
+utilization gap 2^b/m^α (Fig 2(c)) — the paper's dial trades page
+capacity (how many cells a byte needs) against cell endurance (wear.py).
+
+Two layers live here:
+
+1. the cell code itself (``bits_to_levels`` / ``levels_to_bits``) —
+   exact, property-tested roundtrip for all m, α;
+2. a block quantizer (``frac_encode_tensor``) that maps tensors to k-bit
+   blocks (k = 4/6/8) *before* the cell code — used for FRAC-compressed
+   optimizer state, gradient compression and KV caches.  Lossiness lives
+   only in this layer and is a separate, clearly-labeled dial.
+
+Everything is jnp and jit-traceable; kernels/frac_pack provides the
+Pallas TPU version of the hot pack/unpack path with this module as its
+oracle.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Code parameters (Fig 2(c))
+# ---------------------------------------------------------------------------
+
+
+def bits_for(m: int, alpha: int) -> int:
+    """b = ⌊log2(m^α)⌋ — bits stored by α m-state cells."""
+    return int(math.floor(alpha * math.log2(m)))
+
+
+def cell_utilization(m: int, alpha: int) -> float:
+    """2^b / m^α — fraction of the Vth state-space representing data."""
+    return 2.0 ** bits_for(m, alpha) / float(m) ** alpha
+
+
+def best_alpha(m: int, max_alpha: int = 10) -> int:
+    """α maximizing utilization (ties → smallest α)."""
+    return max(range(1, max_alpha + 1), key=lambda a: (cell_utilization(m, a), -a))
+
+
+def bits_per_cell(m: int, max_alpha: int = 10) -> float:
+    a = best_alpha(m, max_alpha)
+    return bits_for(m, a) / a
+
+
+def cells_for_bytes(nbytes: int, m: int, alpha: int) -> int:
+    """Physical cells consumed to store nbytes through the (m, α) code."""
+    b = bits_for(m, alpha)
+    return -(-(nbytes * 8) // b) * alpha
+
+
+def utilization_table(ms=(2, 3, 4, 5, 6, 7, 8), max_alpha: int = 10):
+    """Reproduces Fig 2(c) exactly (EXPERIMENTS.md notes where the
+    paper's in-text examples disagree with the exact radix math)."""
+    rows = []
+    for m in ms:
+        a = best_alpha(m, max_alpha)
+        rows.append({
+            "m": m, "alpha": a, "bits": bits_for(m, a),
+            "utilization": cell_utilization(m, a),
+            "bits_per_cell": bits_per_cell(m, max_alpha),
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Bit packing (uint32 stream)
+# ---------------------------------------------------------------------------
+
+
+def pack_bits(values: jax.Array, bits: int) -> jax.Array:
+    """values: (N,) uint32, each < 2^bits -> packed (ceil(N·bits/32),) uint32."""
+    n = values.shape[0]
+    n_words = -(-(n * bits) // 32)
+    values = values.astype(jnp.uint32)
+    start = jnp.arange(n, dtype=jnp.uint32) * bits
+    word = start // 32
+    off = start % 32
+    lo = values << off
+    # hi spill: bits crossing the word boundary (zero when they don't)
+    hi = jnp.where(off > 0, values >> ((32 - off) % 32), 0)
+    packed = jnp.zeros((n_words + 1,), jnp.uint32)  # +1 sentinel (always 0)
+    packed = packed.at[word].add(lo, mode="drop")   # disjoint bits: add == or
+    packed = packed.at[word + 1].add(hi, mode="drop")
+    return packed[:n_words]
+
+
+def unpack_bits(packed: jax.Array, bits: int, n: int) -> jax.Array:
+    """Inverse of pack_bits -> (n,) uint32."""
+    start = jnp.arange(n, dtype=jnp.uint32) * bits
+    word = start // 32
+    off = start % 32
+    pad = jnp.concatenate([packed, jnp.zeros((1,), jnp.uint32)])
+    lo = pad[word] >> off
+    hi = jnp.where(off > 0, pad[word + 1] << ((32 - off) % 32), 0)
+    mask = jnp.uint32((1 << bits) - 1)
+    return (lo | hi) & mask
+
+
+# ---------------------------------------------------------------------------
+# The FRAC cell code: data bits <-> m-state cell levels (lossless)
+# ---------------------------------------------------------------------------
+
+
+def bits_to_levels(packed: jax.Array, nbits: int, m: int, alpha: int) -> jax.Array:
+    """packed uint32 words carrying ``nbits`` data bits -> cell levels.
+
+    Each b-bit codeword becomes α base-m digits (the write path of
+    Fig 2(e,f): program α cells to the digit Vth states)."""
+    b = bits_for(m, alpha)
+    n_words_cw = -(-nbits // b)                     # number of codewords
+    vals = unpack_bits(packed, b, n_words_cw)       # (< 2^b) each
+    digits = []
+    for _ in range(alpha):
+        digits.append(vals % m)
+        vals = vals // m
+    return jnp.stack(digits, axis=1).reshape(-1).astype(jnp.uint32)
+
+
+def levels_to_bits(levels: jax.Array, m: int, alpha: int) -> jax.Array:
+    """Cell levels -> packed data bits (the read path: ⌈log2 m⌉ sense
+    iterations per cell in wear.py's latency model, then table lookup)."""
+    b = bits_for(m, alpha)
+    grp = levels.astype(jnp.uint32).reshape(-1, alpha)
+    weights = jnp.asarray([m ** i for i in range(alpha)], jnp.uint32)
+    vals = (grp * weights).sum(axis=1)
+    return pack_bits(vals, b)
+
+
+# ---------------------------------------------------------------------------
+# Block quantizer (lossy layer, separate dial)
+# ---------------------------------------------------------------------------
+
+BLOCK = 256  # elements per scale block
+
+
+def _pad_to(x: jax.Array, mult: int) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % mult
+    return jnp.pad(x, (0, pad)) if pad else x
+
+
+def quantize_blocks(
+    x: jax.Array, kbits: int, *, rng: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """x (N,) float -> (codes uint32 in [0, 2^k), per-block scales fp32).
+
+    Symmetric absmax per 256-block; optional stochastic rounding (rng,
+    fed by the Amoeba TRG)."""
+    q = (1 << kbits) - 1
+    xb = _pad_to(x.astype(jnp.float32), BLOCK).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) + 1e-12
+    t = (xb / scale + 1.0) * 0.5 * q                # [0, q]
+    if rng is not None:
+        t = jnp.floor(t + jax.random.uniform(rng, t.shape))
+    else:
+        t = jnp.round(t)
+    codes = jnp.clip(t, 0, q).astype(jnp.uint32)
+    return codes.reshape(-1), scale[:, 0]
+
+
+def dequantize_blocks(
+    codes: jax.Array, scales: jax.Array, kbits: int, n: int
+) -> jax.Array:
+    q = (1 << kbits) - 1
+    n_blocks = scales.shape[0]
+    cb = codes[: n_blocks * BLOCK].astype(jnp.float32).reshape(-1, BLOCK)
+    x = (cb / q * 2.0 - 1.0) * scales[:, None]
+    return x.reshape(-1)[:n]
+
+
+# ---------------------------------------------------------------------------
+# Whole-tensor blobs (checkpoints, frac8 optimizer state, grad compression)
+# ---------------------------------------------------------------------------
+
+
+def frac_encode_tensor(
+    x: jax.Array, kbits: int = 8, *, rng: jax.Array | None = None
+) -> dict[str, Any]:
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    codes, scales = quantize_blocks(flat, kbits, rng=rng)
+    return {
+        "words": pack_bits(codes, kbits),
+        "scales": scales,
+        "meta": (tuple(x.shape), int(kbits), n, str(x.dtype)),
+    }
+
+
+def frac_decode_tensor(blob: dict[str, Any]) -> jax.Array:
+    shape, kbits, n, dtype = blob["meta"]
+    n_cells = -(-n // BLOCK) * BLOCK
+    codes = unpack_bits(blob["words"], kbits, n_cells)
+    x = dequantize_blocks(codes, blob["scales"], kbits, n)
+    return x.reshape(shape).astype(dtype)
+
+
+def frac_zeros_like(x: jax.Array, kbits: int = 8) -> dict[str, Any]:
+    return frac_encode_tensor(jnp.zeros(x.shape, jnp.float32), kbits)
+
+
+def compressed_bytes(blob: dict[str, Any]) -> int:
+    return int(blob["words"].size * 4 + blob["scales"].size * 4)

@@ -1,0 +1,79 @@
+"""Graceful-degradation controller (paper §II-B, Fig 2(d)).
+
+Steps a block down the m-ladder (8→7→5→3→2) when its projected RBER
+approaches the ECC budget, trading capacity for endurance so
+about-to-worn-out blocks in recycled chips keep serving I/O instead of
+retiring.  Compared against the Phoenix-style MLC→SLC cliff ([38]) in
+benchmarks/bench_frac_capacity.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.frac.wear import (
+    ECC_LIMIT,
+    M_LADDER,
+    FlashBlock,
+    RecycledChip,
+    rber,
+)
+
+
+@dataclass
+class DegradationPolicy:
+    headroom: float = 0.85        # step down when rber > headroom · ECC budget
+    ladder: tuple = M_LADDER
+
+    def next_m(self, m: int) -> int | None:
+        try:
+            i = self.ladder.index(m)
+        except ValueError:
+            i = 0
+        return self.ladder[i + 1] if i + 1 < len(self.ladder) else None
+
+    def maybe_degrade(self, block: FlashBlock) -> bool:
+        """Called at erase time; returns True if the block stepped down."""
+        if block.retired:
+            return False
+        if block.rber() <= self.headroom * ECC_LIMIT:
+            return False
+        nxt = self.next_m(block.m)
+        if nxt is None:
+            block.retired = True
+            return False
+        block.m = nxt
+        return True
+
+
+def simulate_lifetime(
+    chip: RecycledChip,
+    policy: DegradationPolicy | None,
+    *,
+    cycles_per_epoch: float = 250.0,
+    epochs: int = 400,
+):
+    """Drive uniform write traffic (wear-leveled) and trace capacity.
+
+    policy=None models the fixed-TLC baseline (blocks retire at the ECC
+    limit).  Returns [(total P/E cycles, capacity_bytes, mean_rber)].
+    """
+    trace = []
+    for e in range(epochs):
+        for b in chip.blocks:
+            if b.retired:
+                continue
+            b.program_erase(cycles_per_epoch)
+            if policy is not None:
+                policy.maybe_degrade(b)
+            elif b.rber() > ECC_LIMIT:
+                b.retired = True
+        live = [b for b in chip.blocks if not b.retired]
+        mean_rber = sum(b.rber() for b in live) / len(live) if live else 0.0
+        trace.append((
+            (e + 1) * cycles_per_epoch,
+            chip.capacity_bytes(),
+            mean_rber,
+        ))
+        if not live:
+            break
+    return trace

@@ -1,0 +1,146 @@
+"""Flash wear / RBER / timing models for recycled NAND chips (paper §II-B).
+
+Calibrated to the paper's measurements (Fig 6: RBER of pages in an aged
+chip after 6k P/E cycles — 0.6% at 2 states, 0.9% at 3, 1.4% at 4) and
+its endurance claims (2-state cells last ~10× a TLC, Fig 2(d); endurance
+has a power-law dependence on P/E cycling with β ≥ 0.3).
+
+Timing follows §II-B Read and Write: reads take ⌈log2 m⌉ sense
+iterations; ISPP programming needs fewer, larger pulses as m shrinks.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+# --- RBER model -------------------------------------------------------------
+# rber(m, n_pe) = A(m) · (n_pe / N0)^gamma
+# Fig 6 anchors (aged chip, 6k cycles): m=2 -> 0.6%, m=3 -> 0.9%, m=4 -> 1.4%.
+N0 = 6000.0
+_A2, _A3, _A4 = 0.006, 0.009, 0.014
+# geometric fit A(m) = A2 * g^(m-2); g from the 2->4 anchor, ~1.53
+_G = math.sqrt(_A4 / _A2)
+# gamma chosen so endurance(m=2)/endurance(m=8) ≈ 10× (paper Fig 2(d))
+ECC_LIMIT = 0.02            # max correctable RBER (LDPC budget, [17])
+
+
+def rber_base(m: int) -> float:
+    """A(m): RBER at the 6k-cycle anchor point for an m-state cell."""
+    return _A2 * _G ** (m - 2)
+
+
+GAMMA = math.log(rber_base(8) / rber_base(2)) / math.log(10.0)
+
+
+def rber(m: int, n_pe: float) -> float:
+    """Raw bit error rate after n_pe program/erase cycles."""
+    return rber_base(m) * (max(n_pe, 1.0) / N0) ** GAMMA
+
+
+def endurance_cycles(m: int) -> float:
+    """P/E cycles until RBER exceeds the ECC budget."""
+    return N0 * (ECC_LIMIT / rber_base(m)) ** (1.0 / GAMMA)
+
+
+def endurance_ratio(m: int, ref: int = 8) -> float:
+    """Endurance vs a TLC-style ref (Fig 2(d): m=2 -> ~10×)."""
+    return endurance_cycles(m) / endurance_cycles(ref)
+
+
+# --- Timing / energy model (§II-B read & write) ------------------------------
+T_SENSE_US = 25.0           # one Vth compare iteration
+T_PULSE_US = 140.0          # one ISPP program pulse + verify
+T_ERASE_US = 3000.0
+E_SENSE_NJ = 35.0           # per-page energy per sense iteration
+E_PULSE_NJ = 220.0
+
+
+def read_iterations(m: int) -> int:
+    return max(1, math.ceil(math.log2(m)))
+
+
+def program_pulses(m: int) -> int:
+    """ISPP starts with a larger pulse for smaller m — fewer pulses,
+    less wear (paper Fig 2(f))."""
+    return 2 + 2 * (m - 1)
+
+
+def page_read_us(m: int) -> float:
+    return read_iterations(m) * T_SENSE_US
+
+
+def page_program_us(m: int) -> float:
+    return program_pulses(m) * T_PULSE_US
+
+
+def page_read_energy_j(m: int) -> float:
+    return read_iterations(m) * E_SENSE_NJ * 1e-9
+
+
+def page_program_energy_j(m: int) -> float:
+    return program_pulses(m) * E_PULSE_NJ * 1e-9
+
+
+# --- Page capacity (Fig 2(d)) --------------------------------------------------
+
+TLC_PAGE_BYTES = 4096
+TLC_BITS_PER_CELL = 3
+CELLS_PER_PAGE = TLC_PAGE_BYTES * 8 // TLC_BITS_PER_CELL  # 10922 cells
+
+
+def page_capacity_bytes(m: int, max_alpha: int = 10) -> float:
+    """Graceful degradation: 4 KB (m=8) -> ~1.3 KB (m=2)."""
+    from repro.core.frac.codec import bits_per_cell
+
+    return CELLS_PER_PAGE * bits_per_cell(m, max_alpha) / 8.0
+
+
+# --- Block / chip simulator ----------------------------------------------------
+
+M_LADDER = (8, 7, 5, 3, 2)   # graceful degradation steps
+
+
+@dataclass
+class FlashBlock:
+    """One erase block of a (possibly recycled) chip."""
+    block_id: int
+    pe_cycles: float = 0.0    # recycled chips arrive pre-worn
+    m: int = 8
+    retired: bool = False
+
+    def rber(self) -> float:
+        return rber(self.m, self.pe_cycles)
+
+    def capacity_bytes(self) -> float:
+        return 0.0 if self.retired else page_capacity_bytes(self.m) * 128
+
+    def program_erase(self, cycles: float = 1.0) -> None:
+        self.pe_cycles += cycles
+
+
+@dataclass
+class RecycledChip:
+    """A recycled NAND chip: blocks arrive with heterogeneous wear.
+
+    ``about-to-worn-out`` blocks (high pre-wear) dominate remaining
+    lifetime — exactly the population FRAC targets."""
+    n_blocks: int = 256
+    seed: int = 0
+    mean_prewear: float = 2500.0
+    blocks: list = field(default_factory=list)
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        pre = rng.gamma(shape=4.0, scale=self.mean_prewear / 4.0,
+                        size=self.n_blocks)
+        self.blocks = [FlashBlock(i, float(p)) for i, p in enumerate(pre)]
+
+    def capacity_bytes(self) -> float:
+        return sum(b.capacity_bytes() for b in self.blocks)
+
+    def least_worn(self, k: int = 1) -> list[FlashBlock]:
+        """Wear-leveling allocator."""
+        live = [b for b in self.blocks if not b.retired]
+        return sorted(live, key=lambda b: b.pe_cycles)[:k]

@@ -1,0 +1,69 @@
+"""Carbon-aware step scheduler (paper §II-A/C).
+
+Converts a renewable-supply forecast into per-interval decisions for a
+training/serving job: run at full rate, derate (smaller effective step
+rate + stronger FRAC gradient compression), or snapshot-and-pause.  The
+"fully nonvolatile accelerator" behaviour — forward progress below the
+threshold power with zero rollover on power loss — is what
+NonvolatileRuntime (nonvolatile.py) provides; this module decides *when*
+to invoke it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from enum import Enum
+
+import numpy as np
+
+
+class Action(Enum):
+    RUN = "run"
+    DERATE = "derate"
+    PAUSE = "pause"
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    full_power_frac: float = 0.70     # supply/peak needed for full rate
+    threshold_frac: float = 0.25      # paper's 'Thld': below this, pause
+    derate_step_scale: float = 0.45   # effective step rate when derated
+    use_forecast: bool = True         # act on predicted (vs current) supply
+    forecast_quantile: float = 0.25   # act on a conservative quantile
+
+
+@dataclass
+class Decision:
+    action: Action
+    step_scale: float                 # fraction of full step rate
+    grad_compress_kbits: int          # FRAC dial for DP gradients
+
+
+class CarbonAwareScheduler:
+    """supply: per-interval available power / data-center peak (0..1+)."""
+
+    def __init__(self, cfg: SchedulerConfig | None = None):
+        self.cfg = cfg or SchedulerConfig()
+
+    def decide(self, supply_frac: float,
+               forecast_frac: float | None = None) -> Decision:
+        c = self.cfg
+        s = supply_frac
+        if c.use_forecast and forecast_frac is not None:
+            s = min(s, forecast_frac)   # conservative: act before the dip
+        if s >= c.full_power_frac:
+            return Decision(Action.RUN, 1.0, 16)
+        if s >= c.threshold_frac:
+            # scale with available power; compress gradients harder
+            scale = c.derate_step_scale + (1 - c.derate_step_scale) * (
+                (s - c.threshold_frac) / (c.full_power_frac - c.threshold_frac)
+            )
+            return Decision(Action.DERATE, float(scale), 6)
+        return Decision(Action.PAUSE, 0.0, 4)
+
+    def schedule(self, supply: np.ndarray,
+                 forecast: np.ndarray | None = None) -> list[Decision]:
+        out = []
+        for i, s in enumerate(supply):
+            f = None if forecast is None else float(forecast[i])
+            out.append(self.decide(float(s), f))
+        return out

@@ -1,0 +1,19 @@
+"""Target-hardware constants (TPU v5e) used by roofline + ESE energy model."""
+
+PEAK_FLOPS_BF16 = 197e12       # per chip, bf16
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+HBM_BYTES = 16 * 2**30          # 16 GiB per chip
+
+# Power model (per chip, approximate public v5e figures; used by ESE)
+CHIP_TDP_W = 220.0              # peak board power
+CHIP_IDLE_W = 60.0
+HOST_OVERHEAD_W = 40.0          # per-chip share of host/NIC
+PUE = 1.1                       # cooling + facility overhead multiplier
+
+# Embodied energy (ESE linear model): total embodied energy per chip and
+# amortization lifetime.  TBE follows LCA estimates for a ~300mm2 5nm
+# accelerator package + board share.
+CHIP_TBE_J = 4.3e9              # ~1.2 MWh embodied per chip incl. share of rack
+CHIP_LIFETIME_S = 5 * 365 * 24 * 3600.0
+RECYCLED_TBE_DISCOUNT = 0.35    # recycled hardware carries 35% of fresh TBE

@@ -1,0 +1,46 @@
+"""jit'd wrappers: fused quantize→pack / unpack→dequantize tensor paths.
+
+These are the checkpoint-manager and grad-compression entry points; the
+pure-jnp codec (core/frac/codec.py) is the oracle and the fallback for
+fractional (non-word-aligned) bit widths.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.frac import codec
+from repro.kernels.frac_pack.frac_pack import pack32, unpack32
+
+
+def encode_tensor(x: jax.Array, kbits: int = 8, interpret: bool = True):
+    """Quantize (256-blocks, absmax) + Pallas-pack.  Matches
+    codec.frac_encode_tensor bit-for-bit for k | 32."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    codes, scales = codec.quantize_blocks(flat, kbits)
+    c = 32 // kbits
+    pad = (-codes.shape[0]) % c
+    if pad:
+        codes = jnp.pad(codes, (0, pad))
+    return {
+        "words": pack32(codes, kbits, interpret=interpret),
+        "scales": scales,
+        "meta": (tuple(x.shape), int(kbits), n, str(x.dtype)),
+    }
+
+
+@partial(jax.jit, static_argnames=("meta", "interpret"))
+def _decode(words, scales, meta, interpret):
+    shape, kbits, n, dtype = meta
+    n_codes = words.shape[0] * (32 // kbits)
+    codes = unpack32(words, kbits, n_codes, interpret=interpret)
+    x = codec.dequantize_blocks(codes, scales, kbits, n)
+    return x.reshape(shape).astype(dtype)
+
+
+def decode_tensor(blob, interpret: bool = True) -> jax.Array:
+    return _decode(blob["words"], blob["scales"], tuple(blob["meta"]),
+                   interpret)

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: batched iterative NTT with Montgomery reduction.
+
+Design (Amoeba MPE adaptation, DESIGN.md §2):
+  - one grid cell = a (block_batch, N) tile resident in VMEM
+    (8 × 4096 × 4 B = 128 KB — fits comfortably);
+  - the log2(N) butterfly stages run *inside* the kernel, unrolled in
+    Python so every stage has static shapes;
+  - all modular arithmetic is int32 Montgomery (R = 2^16): with
+    q = 12289 < 2^14, t + m·q < 2^30 never overflows;
+  - twiddles arrive bit-exact in Montgomery form, so data stays in the
+    standard domain end-to-end (REDC(a · bR) = a·b mod q);
+  - bit-reversal is done by the ops.py wrapper (a gather is cheap there
+    and lane-hostile in-kernel).
+
+TPU layout note: stages with h < 128 are sublane-local after the
+reshape; on real hardware the first log2(128) stages would instead be
+fused into a radix-128 DFT matmul on the MXU — exactly the paper's
+MPE/SHIFT→MVM recoding — which the interpret-mode kernel documents but
+does not need.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+R_BITS = 16
+R = 1 << R_BITS
+
+
+def montgomery_constants(q: int) -> tuple[int, int, int]:
+    """(q' = -q^-1 mod R, R mod q, R^2 mod q)."""
+    q_inv = pow(q, -1, R)
+    return (R - q_inv) % R, R % q, (R * R) % q
+
+
+def _redc(t: jnp.ndarray, q: int, q_prime: int) -> jnp.ndarray:
+    """Montgomery REDC: t < q·R  ->  t·R^-1 mod q, result in [0, q)."""
+    m = (t * q_prime) & (R - 1)
+    u = (t + m * q) >> R_BITS
+    return jnp.where(u >= q, u - q, u)
+
+
+def _mulredc(a: jnp.ndarray, b_mont: jnp.ndarray, q: int, q_prime: int):
+    """a (standard) × b (Montgomery) -> a·b mod q (standard)."""
+    return _redc(a * b_mont, q, q_prime)
+
+
+def _addmod(a, b, q):
+    s = a + b
+    return jnp.where(s >= q, s - q, s)
+
+
+def _submod(a, b, q):
+    d = a - b
+    return jnp.where(d < 0, d + q, d)
+
+
+def ntt_kernel(x_ref, tw_ref, o_ref, *, n: int, q: int, q_prime: int,
+               n_inv_mont: int):
+    """x_ref: (bm, N) int32 bit-reversed standard-domain residues.
+    tw_ref: (N,) int32 Montgomery-form stage twiddles (ref.py layout).
+    n_inv_mont: N^-1·R mod q for the inverse transform, or 0 (forward).
+    """
+    x = x_ref[...]
+    tw = tw_ref[...]
+    bm = x.shape[0]
+    h = 1
+    while h < n:
+        xr = x.reshape(bm, n // (2 * h), 2, h)
+        a = xr[:, :, 0, :]
+        b = xr[:, :, 1, :]
+        t = _mulredc(b, tw[h: 2 * h][None, None, :], q, q_prime)
+        lo = _addmod(a, t, q)
+        hi = _submod(a, t, q)
+        x = jnp.concatenate([lo[:, :, None, :], hi[:, :, None, :]],
+                            axis=2).reshape(bm, n)
+        h *= 2
+    if n_inv_mont:
+        x = _mulredc(x, jnp.int32(n_inv_mont), q, q_prime)
+    o_ref[...] = x
+
+
+def ntt_pallas(x_bitrev: jax.Array, tw_mont: jax.Array, *, q: int,
+               inverse: bool, block_batch: int = 8,
+               interpret: bool = True) -> jax.Array:
+    """x_bitrev: (B, N) int32.  Returns the transform, natural order."""
+    B, n = x_bitrev.shape
+    q_prime, r_mod_q, _ = montgomery_constants(q)
+    n_inv_mont = (pow(n, q - 2, q) * R) % q if inverse else 0
+    bm = min(block_batch, B)
+    assert B % bm == 0, (B, bm)
+    kern = partial(ntt_kernel, n=n, q=q, q_prime=q_prime,
+                   n_inv_mont=n_inv_mont)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((B, n), jnp.int32),
+        grid=(B // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x_bitrev, tw_mont)

@@ -1,0 +1,125 @@
+"""Pure-jnp NTT oracle (paper §II-A: lattice-crypto workload, q=12289).
+
+Iterative Cooley-Tukey DIT over Z_q, bit-reversed input / natural
+output, Kyber-style per-stage twiddle layout ``tw[h + j] = w_{2h}^j``.
+The Pallas kernel (ntt.py) mirrors this computation exactly.
+
+All arithmetic is int32 by construction: q = 12289 < 2^14 keeps every
+product below 2^28 (general bound: q < 46341), matching the TPU's
+32-bit integer datapath — no 64-bit widening anywhere.
+
+Modular-arithmetic note (recorded in EXPERIMENTS.md): q = 12289 has
+q-1 = 3·2^12, so the largest power-of-two cyclic NTT this modulus
+admits is N = 4096 (negacyclic: 2048).  The paper's "32k NTT with fixed
+q = 12289" is arithmetically unsatisfiable as a single transform; the
+benchmark therefore runs 32k points as a batch of 4096-point
+transforms, faithful to the modulus.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax.numpy as jnp
+import numpy as np
+
+Q = 12289
+GEN = 11                      # generator of Z_q^*
+
+
+@lru_cache(maxsize=None)
+def primitive_root(n: int, q: int = Q, gen: int = GEN) -> int:
+    """w with order exactly n in Z_q^*."""
+    assert (q - 1) % n == 0, f"{n}-point NTT impossible mod {q}"
+    w = pow(gen, (q - 1) // n, q)
+    assert pow(w, n, q) == 1 and pow(w, n // 2, q) != 1
+    return w
+
+
+@lru_cache(maxsize=None)
+def bitrev_perm(n: int) -> tuple[int, ...]:
+    bits = n.bit_length() - 1
+    return tuple(int(f"{i:0{bits}b}"[::-1], 2) for i in range(n))
+
+
+@lru_cache(maxsize=None)
+def stage_twiddles(n: int, q: int = Q, inverse: bool = False) -> np.ndarray:
+    """tw[h + j] = w_{2h}^j for h = 1, 2, ..., n/2 (tw[0] unused)."""
+    w = primitive_root(n, q)
+    if inverse:
+        w = pow(w, q - 2, q)
+    tw = np.zeros(n, np.int64)
+    h = 1
+    while h < n:
+        wh = pow(w, n // (2 * h), q)
+        cur = 1
+        for j in range(h):
+            tw[h + j] = cur
+            cur = cur * wh % q
+        h *= 2
+    return tw
+
+
+def ntt(x: jnp.ndarray, q: int = Q, inverse: bool = False) -> jnp.ndarray:
+    """x: (..., N) int32 in [0, q).  Cyclic NTT (or scaled inverse)."""
+    n = x.shape[-1]
+    perm = jnp.asarray(bitrev_perm(n), jnp.int32)
+    tw = jnp.asarray(stage_twiddles(n, q, inverse), jnp.int32)
+    x = x[..., perm].astype(jnp.int32)
+    h = 1
+    while h < n:
+        xr = x.reshape(*x.shape[:-1], n // (2 * h), 2, h)
+        a = xr[..., 0, :]
+        b = xr[..., 1, :]
+        t = (b * tw[h: 2 * h].astype(jnp.int32)) % q
+        x = jnp.concatenate(
+            [((a + t) % q)[..., None, :], ((a - t) % q)[..., None, :]],
+            axis=-2,
+        ).reshape(*x.shape[:-1], n)
+        h *= 2
+    if inverse:
+        n_inv = pow(n, q - 2, q)
+        x = (x * n_inv) % q
+    return x.astype(jnp.int32)
+
+
+def intt(x: jnp.ndarray, q: int = Q) -> jnp.ndarray:
+    return ntt(x, q, inverse=True)
+
+
+# --- negacyclic wrapper (polynomial product mod x^N + 1) ----------------------
+
+
+@lru_cache(maxsize=None)
+def psi_powers(n: int, q: int = Q, inverse: bool = False) -> np.ndarray:
+    """ψ = primitive 2n-th root; ψ^i (or ψ^-i) for the negacyclic twist."""
+    psi = primitive_root(2 * n, q)
+    if inverse:
+        psi = pow(psi, q - 2, q)
+    out = np.zeros(n, np.int64)
+    cur = 1
+    for i in range(n):
+        out[i] = cur
+        cur = cur * psi % q
+    return out
+
+
+def negacyclic_mul(a: jnp.ndarray, b: jnp.ndarray, q: int = Q) -> jnp.ndarray:
+    """(a · b) mod (x^N + 1, q) via twisted NTT."""
+    n = a.shape[-1]
+    psi = jnp.asarray(psi_powers(n, q), jnp.int32)
+    psi_inv = jnp.asarray(psi_powers(n, q, inverse=True), jnp.int32)
+    at = (a.astype(jnp.int32) * psi) % q
+    bt = (b.astype(jnp.int32) * psi) % q
+    prod = (ntt(at.astype(jnp.int32), q).astype(jnp.int32)
+            * ntt(bt.astype(jnp.int32), q).astype(jnp.int32)) % q
+    out = intt(prod.astype(jnp.int32), q).astype(jnp.int32)
+    return ((out * psi_inv) % q).astype(jnp.int32)
+
+
+def schoolbook_negacyclic(a: np.ndarray, b: np.ndarray, q: int = Q) -> np.ndarray:
+    """O(N²) oracle for the oracle."""
+    n = a.shape[-1]
+    full = np.zeros(2 * n, np.int64)
+    for i in range(n):
+        full[i: i + n] += int(a[i]) * b.astype(np.int64)
+    return ((full[:n] - full[n:]) % q).astype(np.int32)

@@ -1,0 +1,102 @@
+"""Keccak-f[1600] / SHA3-256 oracle (numpy uint64 lanes).
+
+End-to-end digests are additionally checked against ``hashlib.sha3_256``
+in the tests, so this oracle is itself oracle-backed.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+RATE_BYTES = 136              # SHA3-256: r = 1088 bits (paper's block size)
+DIGEST_BYTES = 32
+N_ROUNDS = 24
+
+# rho rotation offsets, lane l = x + 5y
+RHO = [0, 1, 62, 28, 27,
+       36, 44, 6, 55, 20,
+       3, 10, 43, 25, 39,
+       41, 45, 15, 21, 8,
+       18, 2, 61, 56, 14]
+
+# pi: lane l moves to PI[l] (dest[PI[l]] = rot(src[l]))
+PI = [0] * 25
+for x in range(5):
+    for y in range(5):
+        PI[x + 5 * y] = y + 5 * ((2 * x + 3 * y) % 5)
+
+RC = np.array([
+    0x0000000000000001, 0x0000000000008082, 0x800000000000808A,
+    0x8000000080008000, 0x000000000000808B, 0x0000000080000001,
+    0x8000000080008081, 0x8000000000008009, 0x000000000000008A,
+    0x0000000000000088, 0x0000000080008009, 0x000000008000000A,
+    0x000000008000808B, 0x800000000000008B, 0x8000000000008089,
+    0x8000000000008003, 0x8000000000008002, 0x8000000000000080,
+    0x000000000000800A, 0x800000008000000A, 0x8000000080008081,
+    0x8000000000008080, 0x0000000080000001, 0x8000000080008008,
+], dtype=np.uint64)
+
+
+def _rotl(x: np.ndarray, r: int) -> np.ndarray:
+    r = r % 64
+    if r == 0:
+        return x
+    return (x << np.uint64(r)) | (x >> np.uint64(64 - r))
+
+
+def keccak_f(state: np.ndarray) -> np.ndarray:
+    """state: (B, 25) uint64 -> permuted state."""
+    a = state.copy()
+    for rnd in range(N_ROUNDS):
+        # theta
+        c = [a[:, x] ^ a[:, x + 5] ^ a[:, x + 10] ^ a[:, x + 15] ^ a[:, x + 20]
+             for x in range(5)]
+        d = [c[(x - 1) % 5] ^ _rotl(c[(x + 1) % 5], 1) for x in range(5)]
+        for x in range(5):
+            for y in range(5):
+                a[:, x + 5 * y] ^= d[x]
+        # rho + pi
+        b = np.empty_like(a)
+        for l in range(25):
+            b[:, PI[l]] = _rotl(a[:, l], RHO[l])
+        # chi
+        for y in range(5):
+            row = [b[:, x + 5 * y] for x in range(5)]
+            for x in range(5):
+                a[:, x + 5 * y] = row[x] ^ (~row[(x + 1) % 5] & row[(x + 2) % 5])
+        # iota
+        a[:, 0] ^= RC[rnd]
+    return a
+
+
+def pad_messages(msgs: list[bytes]) -> tuple[np.ndarray, np.ndarray]:
+    """SHA3 pad10*1 (domain 0x06).
+
+    Returns (lanes (B, max_blocks, 17) uint64, n_blocks_per_msg (B,)).
+    Rows are zero past each message's own padded length; the absorb loop
+    masks the permutation for finished messages."""
+    nb = np.asarray([(len(m) // RATE_BYTES) + 1 for m in msgs])
+    max_blocks = int(nb.max())
+    out = np.zeros((len(msgs), max_blocks * RATE_BYTES), np.uint8)
+    for i, m in enumerate(msgs):
+        buf = bytearray(m)
+        buf.append(0x06)
+        pad_len = nb[i] * RATE_BYTES - len(buf)
+        buf.extend(b"\x00" * pad_len)
+        buf[-1] |= 0x80
+        out[i, : len(buf)] = np.frombuffer(bytes(buf), np.uint8)
+    lanes = out.reshape(len(msgs), max_blocks, RATE_BYTES // 8, 8)
+    return lanes.view(np.uint64)[..., 0], nb      # little-endian lanes
+
+
+def sha3_256(msgs: list[bytes]) -> list[bytes]:
+    blocks, nb = pad_messages(msgs)
+    B, max_blocks, _ = blocks.shape
+    state = np.zeros((B, 25), np.uint64)
+    for blk in range(max_blocks):
+        active = blk < nb                          # (B,)
+        xored = state.copy()
+        xored[:, :17] ^= blocks[:, blk]
+        permuted = keccak_f(xored)
+        state = np.where(active[:, None], permuted, state)
+    dig = state[:, :4].copy().view(np.uint8).reshape(B, 32)
+    return [bytes(dig[i]) for i in range(B)]

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: batched Keccak-f[1600] (paper §II-A, SHA3 engine).
+
+TPU has no 64-bit integer datapath, so lanes are (lo, hi) uint32 pairs —
+state tile (block_batch, 25, 2) in VMEM, grid over the message batch.
+The 24 rounds run in a fori_loop (static shapes; only the iota round
+constant is dynamically indexed); theta/rho/pi/chi are unrolled over the
+25 lanes with static rotation counts, which the Mosaic compiler turns
+into pure VPU bitwise traffic — the CPE engine of the Amoeba mapping.
+
+Oracle: ref.py (numpy uint64) which is itself validated against
+hashlib.sha3_256.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.sha3.ref import N_ROUNDS, PI, RC, RHO
+
+# RC as (24, 2) uint32 [lo, hi]
+RC32 = np.stack([RC.astype(np.uint64) & np.uint64(0xFFFFFFFF),
+                 RC.astype(np.uint64) >> np.uint64(32)], axis=1).astype(np.uint32)
+
+
+def _rotl_pair(lo, hi, r: int):
+    """64-bit rotate-left on (lo, hi) uint32 pairs, static r."""
+    r = r % 64
+    if r == 0:
+        return lo, hi
+    if r == 32:
+        return hi, lo
+    if r < 32:
+        nlo = (lo << r) | (hi >> (32 - r))
+        nhi = (hi << r) | (lo >> (32 - r))
+        return nlo, nhi
+    return _rotl_pair(hi, lo, r - 32)
+
+
+def keccak_kernel(state_ref, rc_ref, o_ref):
+    """state_ref: (bm, 25, 2) uint32; rc_ref: (24, 2) round constants."""
+    st = state_ref[...]
+    rc = rc_ref[...]
+
+    def round_fn(rnd, st):
+        lo = [st[:, l, 0] for l in range(25)]
+        hi = [st[:, l, 1] for l in range(25)]
+        # theta
+        clo = [lo[x] ^ lo[x + 5] ^ lo[x + 10] ^ lo[x + 15] ^ lo[x + 20]
+               for x in range(5)]
+        chi_ = [hi[x] ^ hi[x + 5] ^ hi[x + 10] ^ hi[x + 15] ^ hi[x + 20]
+                for x in range(5)]
+        for x in range(5):
+            rl, rh = _rotl_pair(clo[(x + 1) % 5], chi_[(x + 1) % 5], 1)
+            dlo = clo[(x - 1) % 5] ^ rl
+            dhi = chi_[(x - 1) % 5] ^ rh
+            for y in range(5):
+                lo[x + 5 * y] = lo[x + 5 * y] ^ dlo
+                hi[x + 5 * y] = hi[x + 5 * y] ^ dhi
+        # rho + pi
+        blo = [None] * 25
+        bhi = [None] * 25
+        for l in range(25):
+            blo[PI[l]], bhi[PI[l]] = _rotl_pair(lo[l], hi[l], RHO[l])
+        # chi
+        for y in range(5):
+            rl = [blo[x + 5 * y] for x in range(5)]
+            rh = [bhi[x + 5 * y] for x in range(5)]
+            for x in range(5):
+                lo[x + 5 * y] = rl[x] ^ (~rl[(x + 1) % 5] & rl[(x + 2) % 5])
+                hi[x + 5 * y] = rh[x] ^ (~rh[(x + 1) % 5] & rh[(x + 2) % 5])
+        # iota
+        lo[0] = lo[0] ^ rc[rnd, 0]
+        hi[0] = hi[0] ^ rc[rnd, 1]
+        return jnp.stack(
+            [jnp.stack([lo[l], hi[l]], axis=-1) for l in range(25)], axis=1
+        )
+
+    st = jax.lax.fori_loop(0, N_ROUNDS, round_fn, st)
+    o_ref[...] = st
+
+
+@partial(jax.jit, static_argnames=("block_batch", "interpret"))
+def keccak_f_pallas(state: jax.Array, block_batch: int = 64,
+                    interpret: bool = True) -> jax.Array:
+    """state: (B, 25, 2) uint32 [lo, hi] -> permuted."""
+    B = state.shape[0]
+    bm = min(block_batch, B)
+    assert B % bm == 0
+    return pl.pallas_call(
+        keccak_kernel,
+        out_shape=jax.ShapeDtypeStruct((B, 25, 2), jnp.uint32),
+        grid=(B // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, 25, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((N_ROUNDS, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 25, 2), lambda i: (i, 0, 0)),
+        interpret=interpret,
+    )(state, jnp.asarray(RC32))

@@ -1,0 +1,41 @@
+"""Production mesh builders.
+
+Functions, not module-level constants, so importing this module never
+touches jax device state (required for the smoke tests, which must see
+one real CPU device).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def _mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    ndev = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"mesh {shape} needs {ndev} devices, have {len(devices)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "(launch/dryrun.py sets this)"
+        )
+    if len(devices) == ndev:
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return Mesh(np.asarray(devices[:ndev]).reshape(shape), axes)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16×16 = one v5e-256 pod; (2,16,16) = two pods / 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    return _mesh((data, model), ("data", "model"))

@@ -1,0 +1,119 @@
+"""ShapeDtypeStruct stand-ins + shardings for every lowered entry point.
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable,
+allocation-free abstract inputs for the given cell kind; the dry-run and
+the real launchers share these builders so what we lower is what we run.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, resolve_layout
+from repro.models import model
+from repro.sharding.rules import (
+    batch_axes,
+    cache_shardings,
+    param_shardings,
+)
+
+
+def _layout(cfg: ModelConfig, mesh: Mesh) -> str:
+    return resolve_layout(cfg, mesh.shape.get("model", 1))
+
+
+def _bspec(mesh: Mesh, global_batch: int, ndims: int) -> NamedSharding:
+    baxes = batch_axes(mesh, global_batch)
+    lead = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    return NamedSharding(mesh, P(lead, *([None] * (ndims - 1))))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *, labels: bool):
+    """Abstract train/prefill batch dict + shardings."""
+    B, S = shape.global_batch, shape.seq_len
+    specs: dict[str, Any] = {}
+    shards: dict[str, Any] = {}
+    if cfg.input_mode == "embeddings" and cfg.family != "audio":
+        specs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        shards["embeds"] = _bspec(mesh, B, 3)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        shards["tokens"] = _bspec(mesh, B, 2)
+    if cfg.family == "audio":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        shards["tokens"] = _bspec(mesh, B, 2)
+        specs["enc_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16
+        )
+        shards["enc_embeds"] = _bspec(mesh, B, 3)
+    if labels:
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        shards["labels"] = _bspec(mesh, B, 2)
+    return specs, shards
+
+
+def opt_state_specs(cfg: ModelConfig, mesh: Mesh):
+    """Abstract AdamW state + shardings (m/v mirror the params)."""
+    p_abs = model.abstract_params(cfg)
+    p_shard = param_shardings(model.param_specs(cfg), mesh, _layout(cfg, mesh))
+    mv_abs = jax.tree.map(
+        lambda p: {
+            "m": jax.ShapeDtypeStruct(p.shape, jnp.float32),
+            "v": jax.ShapeDtypeStruct(p.shape, jnp.float32),
+        },
+        p_abs,
+    )
+    mv_shard = jax.tree.map(lambda s: {"m": s, "v": s}, p_shard)
+    rep = NamedSharding(mesh, P())
+    return (
+        {"mv": mv_abs, "step": jax.ShapeDtypeStruct((), jnp.int32)},
+        {"mv": mv_shard, "step": rep},
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """(args, in_shardings, donate_argnums, out_shardings) for the cell."""
+    B, S = shape.global_batch, shape.seq_len
+    p_abs = model.abstract_params(cfg)
+    p_shard = param_shardings(model.param_specs(cfg), mesh, _layout(cfg, mesh))
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        batch, bshard = batch_specs(cfg, shape, mesh, labels=True)
+        opt_abs, opt_shard = opt_state_specs(cfg, mesh)
+        args = (p_abs, opt_abs, batch)
+        shards = (p_shard, opt_shard, bshard)
+        # out: (params, opt, loss)
+        return args, shards, (0, 1), (p_shard, opt_shard, rep)
+
+    if shape.kind == "prefill":
+        batch, bshard = batch_specs(cfg, shape, mesh, labels=False)
+        c_shard = cache_shardings(model.cache_specs(cfg, B, S), mesh, B)
+        # out: (sampled tokens, cache) — pinning the cache sharding stops
+        # XLA materializing a replicated (B,S,K,hd) cache per device
+        return (p_abs, batch), (p_shard, bshard), (), (_bspec(mesh, B, 1), c_shard)
+
+    if shape.kind == "decode":
+        cache_abs = model.abstract_cache(cfg, B, S)
+        c_shard = cache_shardings(model.cache_specs(cfg, B, S), mesh, B)
+        tokens = jax.ShapeDtypeStruct((B,), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        args = (p_abs, cache_abs, tokens, pos)
+        shards = (p_shard, c_shard, _bspec(mesh, B, 1), rep)
+        return args, shards, (1,), (_bspec(mesh, B, 1), c_shard)
+
+    raise ValueError(shape.kind)
+
+
+def entry_point(cfg: ModelConfig, shape: ShapeConfig, ocfg=None):
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.step import make_prefill_step, make_serve_step, make_train_step
+
+    if shape.kind == "train":
+        return make_train_step(cfg, ocfg or AdamWConfig())
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg)
+    return make_serve_step(cfg)

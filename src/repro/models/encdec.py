@@ -1,0 +1,210 @@
+"""Encoder/decoder transformer (whisper-medium backbone).
+
+The audio conv frontend is a STUB per the brief: ``input_specs()``
+provides precomputed frame embeddings (B, encoder_seq, d_model).
+Positions are sinusoidal on both sides (whisper uses sinusoidal encoder
+positions; we substitute sinusoidal for the decoder's learned table —
+noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (
+    LeafSpec,
+    activate,
+    attention,
+    layer_norm,
+    sinusoidal_positions,
+    stacked,
+)
+from repro.models.transformer import attn_param_specs, mlp_param_specs
+
+
+def _norm_specs(D):
+    return {
+        "scale": LeafSpec((D,), ("embed",), init="ones"),
+        "bias": LeafSpec((D,), ("embed",), init="zeros"),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    enc_block = {
+        "ln1": _norm_specs(D),
+        "attn": attn_param_specs(cfg),
+        "ln2": _norm_specs(D),
+        "mlp": mlp_param_specs(cfg),
+    }
+    dec_block = {
+        "ln1": _norm_specs(D),
+        "self_attn": attn_param_specs(cfg),
+        "ln_x": _norm_specs(D),
+        "cross_attn": attn_param_specs(cfg),
+        "ln2": _norm_specs(D),
+        "mlp": mlp_param_specs(cfg),
+    }
+    as_stack = lambda n, blk: jax.tree.map(
+        lambda s: stacked(n, s), blk, is_leaf=lambda x: isinstance(x, LeafSpec)
+    )
+    return {
+        "embed": LeafSpec((cfg.vocab_size, D), ("vocab", "embed")),
+        "enc_layers": as_stack(cfg.encoder_layers, enc_block),
+        "enc_final": _norm_specs(D),
+        "dec_layers": as_stack(cfg.num_layers, dec_block),
+        "dec_final": _norm_specs(D),
+    }  # lm head tied to embed (whisper ties)
+
+
+def _ln(x, p):
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def _attn_full(x, kv, ap, cfg, *, causal):
+    q = jnp.einsum("bsd,dhk->bshk", x, ap["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv, ap["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv, ap["wv"])
+    out = attention(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, ap["wo"])
+
+
+def encode(cfg: ModelConfig, params, enc_embeds: jax.Array) -> jax.Array:
+    B, T, D = enc_embeds.shape
+    x = enc_embeds.astype(jnp.bfloat16) + sinusoidal_positions(T, D).astype(
+        jnp.bfloat16
+    )
+
+    def body(x, bp):
+        h = _ln(x, bp["ln1"])
+        x = x + _attn_full(h, h, bp["attn"], cfg, causal=False)
+        h = _ln(x, bp["ln2"])
+        up = activate(h @ bp["mlp"]["w_up"], cfg.mlp_activation)
+        return x + up @ bp["mlp"]["w_down"], None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = lax.scan(body, x, params["enc_layers"])
+    return _ln(x, params["enc_final"])
+
+
+def _dec_body(cfg, enc_out):
+    def body(x, bp):
+        h = _ln(x, bp["ln1"])
+        x = x + _attn_full(h, h, bp["self_attn"], cfg, causal=True)
+        h = _ln(x, bp["ln_x"])
+        x = x + _attn_full(h, enc_out, bp["cross_attn"], cfg, causal=False)
+        h = _ln(x, bp["ln2"])
+        up = activate(h @ bp["mlp"]["w_up"], cfg.mlp_activation)
+        return x + up @ bp["mlp"]["w_down"], None
+
+    return body
+
+
+def forward(cfg: ModelConfig, params, batch) -> jax.Array:
+    """batch: enc_embeds (B,T,D) + tokens (B,S).  Returns (B,S,V) logits."""
+    enc_out = encode(cfg, params, batch["enc_embeds"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"][tokens] + sinusoidal_positions(S, cfg.d_model).astype(
+        jnp.bfloat16
+    )
+    body = _dec_body(cfg, enc_out)
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = lax.scan(body, x, params["dec_layers"])
+    x = _ln(x, params["dec_final"])
+    return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    """Encoder pass + decoder prefill; emits self + cross KV caches."""
+    enc_out = encode(cfg, params, batch["enc_embeds"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"][tokens] + sinusoidal_positions(S, cfg.d_model).astype(
+        jnp.bfloat16
+    )
+
+    def body(x, bp):
+        h = _ln(x, bp["ln1"])
+        sk = jnp.einsum("bsd,dhk->bshk", h, bp["self_attn"]["wk"])
+        sv = jnp.einsum("bsd,dhk->bshk", h, bp["self_attn"]["wv"])
+        x = x + _attn_full(h, h, bp["self_attn"], cfg, causal=True)
+        h = _ln(x, bp["ln_x"])
+        ck = jnp.einsum("bsd,dhk->bshk", enc_out, bp["cross_attn"]["wk"])
+        cv = jnp.einsum("bsd,dhk->bshk", enc_out, bp["cross_attn"]["wv"])
+        x = x + _attn_full(h, enc_out, bp["cross_attn"], cfg, causal=False)
+        h = _ln(x, bp["ln2"])
+        up = activate(h @ bp["mlp"]["w_up"], cfg.mlp_activation)
+        x = x + up @ bp["mlp"]["w_down"]
+        return x, {"sk": sk, "sv": sv, "ck": ck, "cv": cv}
+
+    x, cache = lax.scan(body, x, params["dec_layers"])
+    x = _ln(x, params["dec_final"])
+    logits = jnp.einsum("bsd,vd->bsv", x[:, -1:], params["embed"])
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """tokens: (B,); cache: {sk, sv (L,B,Sc,H,hd), ck, cv (L,B,T,H,hd)}."""
+    B = tokens.shape[0]
+    pe = sinusoidal_positions(1, cfg.d_model, offset=pos)
+    x = (params["embed"][tokens] + pe.astype(jnp.bfloat16))[:, None, :]
+
+    def body(x, bp_bc):
+        bp, bc = bp_bc
+        h = _ln(x, bp["ln1"])
+        q = jnp.einsum("bsd,dhk->bshk", h, bp["self_attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, bp["self_attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, bp["self_attn"]["wv"])
+        sk = lax.dynamic_update_slice_in_dim(bc["sk"], k, pos, axis=1)
+        sv = lax.dynamic_update_slice_in_dim(bc["sv"], v, pos, axis=1)
+        out = attention(
+            q, sk, sv, causal=False, kv_valid_len=jnp.minimum(pos + 1, sk.shape[1])
+        )
+        x = x + jnp.einsum("bshk,hkd->bsd", out, bp["self_attn"]["wo"])
+        h = _ln(x, bp["ln_x"])
+        q = jnp.einsum("bsd,dhk->bshk", h, bp["cross_attn"]["wq"])
+        out = attention(q, bc["ck"], bc["cv"], causal=False)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, bp["cross_attn"]["wo"])
+        h = _ln(x, bp["ln2"])
+        up = activate(h @ bp["mlp"]["w_up"], cfg.mlp_activation)
+        x = x + up @ bp["mlp"]["w_down"]
+        return x, {"sk": sk, "sv": sv, "ck": bc["ck"], "cv": bc["cv"]}
+
+    x, new_cache = lax.scan(body, x, (params["dec_layers"], cache))
+    x = _ln(x, params["dec_final"])
+    return jnp.einsum("bsd,vd->bsv", x, params["embed"])[:, 0], new_cache
+
+
+def init_cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    H, hd = cfg.num_heads, cfg.head_dim
+    T = cfg.encoder_seq
+    block = {
+        "sk": LeafSpec(
+            (batch, seq_len, H, hd), ("batch", "kv_seq", "kv_heads", "head_dim"),
+            init="zeros",
+        ),
+        "sv": LeafSpec(
+            (batch, seq_len, H, hd), ("batch", "kv_seq", "kv_heads", "head_dim"),
+            init="zeros",
+        ),
+        "ck": LeafSpec(
+            (batch, T, H, hd), ("batch", "none", "kv_heads", "head_dim"),
+            init="zeros",
+        ),
+        "cv": LeafSpec(
+            (batch, T, H, hd), ("batch", "none", "kv_heads", "head_dim"),
+            init="zeros",
+        ),
+    }
+    return jax.tree.map(
+        lambda s: stacked(cfg.num_layers, s),
+        block,
+        is_leaf=lambda x: isinstance(x, LeafSpec),
+    )

@@ -1,0 +1,124 @@
+"""Mamba (S6) selective-SSM block for the jamba hybrid architecture.
+
+Training/prefill run the recurrence with ``lax.scan`` over time (O(1)
+state materialization — the (B, d_inner, d_state) carry never unrolls,
+keeping the 500k-token dry-run memory bounded).  Decode is one step of
+the same recurrence against a carried state.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import LeafSpec, causal_depthwise_conv
+
+
+def _a_log_init(key, shape):
+    # S4D-real init: A = -[1..d_state] per channel (broadcast over any
+    # leading stacked-layer dims)
+    *lead, d_inner, d_state = shape
+    a = np.arange(1, d_state + 1, dtype=np.float32)
+    return jnp.broadcast_to(jnp.asarray(np.log(a)), tuple(shape))
+
+
+def _dt_bias_init(key, shape):
+    # dt in [1e-3, 1e-1] after softplus, mamba reference init
+    lo, hi = 1e-3, 1e-1
+    u = jax.random.uniform(key, shape, jnp.float32)
+    dt = jnp.exp(u * (math.log(hi) - math.log(lo)) + math.log(lo))
+    return dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+
+
+def mamba_param_specs(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    di = cfg.mamba_d_inner
+    n = cfg.mamba_d_state
+    r = cfg.mamba_dt_rank
+    w = cfg.mamba_d_conv
+    return {
+        "in_proj": LeafSpec((D, 2 * di), ("embed", "mamba_inner")),
+        "conv_w": LeafSpec((di, w), ("mamba_inner", "none")),
+        "conv_b": LeafSpec((di,), ("mamba_inner",), init="zeros"),
+        "x_proj": LeafSpec((di, r + 2 * n), ("mamba_inner", "none")),
+        "dt_proj": LeafSpec((r, di), ("none", "mamba_inner")),
+        "dt_bias": LeafSpec(
+            (di,), ("mamba_inner",), init_fn=_dt_bias_init, dtype=jnp.float32
+        ),
+        "A_log": LeafSpec(
+            (di, n), ("mamba_inner", "none"), init_fn=_a_log_init, dtype=jnp.float32
+        ),
+        "D_skip": LeafSpec((di,), ("mamba_inner",), init="ones", dtype=jnp.float32),
+        "out_proj": LeafSpec((di, D), ("mamba_inner", "embed")),
+    }
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int):
+    """Decode carry: (conv window, ssm state)."""
+    di, n, w = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    return {
+        "conv": jnp.zeros((batch, w - 1, di), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, di, n), jnp.float32),
+    }
+
+
+def _ssm_inputs(x_c, p, cfg):
+    """x_c: (..., di) post-conv activations -> (dt, B, C) ssm params."""
+    r, n = cfg.mamba_dt_rank, cfg.mamba_d_state
+    bdt = (x_c @ p["x_proj"]).astype(jnp.float32)
+    dt_r, Bm, Cm = jnp.split(bdt, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
+    return dt, Bm, Cm
+
+
+def _ssm_step(h, dt, Bm, Cm, x_c, A):
+    """One recurrence step.  h: (B, di, n); dt/x_c: (B, di); Bm/Cm: (B, n)."""
+    dA = jnp.exp(dt[..., None] * A[None])                   # (B, di, n)
+    dBx = (dt * x_c.astype(jnp.float32))[..., None] * Bm[:, None, :]
+    h = h * dA + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cm)
+    return h, y
+
+
+def mamba_block(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)   (training / prefill form)."""
+    B, S, D = x.shape
+    di = cfg.mamba_d_inner
+    xz = x @ p["in_proj"]                                   # (B, S, 2di)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c = jax.nn.silu(causal_depthwise_conv(x_in, p["conv_w"], p["conv_b"]))
+    dt, Bm, Cm = _ssm_inputs(x_c, p, cfg)                   # (B,S,di),(B,S,n)
+    A = -jnp.exp(p["A_log"])                                # (di, n)
+
+    def body(h, t):
+        h, y = _ssm_step(h, dt[:, t], Bm[:, t], Cm[:, t], x_c[:, t], A)
+        return h, y
+
+    h0 = jnp.zeros((B, di, cfg.mamba_d_state), jnp.float32)
+    _, ys = lax.scan(body, h0, jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)              # (B, S, di)
+    y = y + p["D_skip"].astype(x.dtype) * x_c
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba_decode_step(x: jax.Array, state: dict, p: dict, cfg: ModelConfig):
+    """x: (B, D) single token -> (out (B, D), new state)."""
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)                     # (B, di)
+    # conv over (carried window ++ current)
+    win = jnp.concatenate([state["conv"], x_in[:, None, :]], axis=1)  # (B,w,di)
+    wconv = p["conv_w"].astype(jnp.float32)                 # (di, w)
+    x_c = jnp.einsum("bwd,dw->bd", win.astype(jnp.float32), wconv)
+    x_c = jax.nn.silu(x_c + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    dt, Bm, Cm = _ssm_inputs(x_c, p, cfg)
+    A = -jnp.exp(p["A_log"])
+    h, y = _ssm_step(state["ssm"], dt, Bm, Cm, x_c, A)
+    y = y.astype(x.dtype) + p["D_skip"].astype(x.dtype) * x_c
+    y = y * jax.nn.silu(z)
+    new_state = {"conv": win[:, 1:, :].astype(jnp.bfloat16), "ssm": h}
+    return y @ p["out_proj"], new_state

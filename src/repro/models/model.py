@@ -1,0 +1,118 @@
+"""Unified model API: family dispatch + init/abstract/axes + loss.
+
+Every caller (train loop, serve engine, dry-run, tests) goes through
+this module, so the three views of a model — concrete params, abstract
+params, logical sharding axes — are guaranteed consistent.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, rwkv, transformer
+from repro.models.common import (
+    LeafSpec,
+    cross_entropy,
+    is_leaf_spec,
+    tree_abstract,
+    tree_dims,
+    tree_init,
+)
+
+Pytree = Any
+
+
+def _mod(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return rwkv
+    if cfg.family == "audio":
+        return encdec
+    return transformer  # dense | moe | vlm | hybrid
+
+
+# -- params -----------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> Pytree:
+    return _mod(cfg).param_specs(cfg)
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array) -> Pytree:
+    return tree_init(param_specs(cfg), rng)
+
+
+def abstract_params(cfg: ModelConfig) -> Pytree:
+    return tree_abstract(param_specs(cfg))
+
+
+def param_axes(cfg: ModelConfig) -> Pytree:
+    return tree_dims(param_specs(cfg))
+
+
+def count_params(cfg: ModelConfig) -> int:
+    return sum(
+        int(np.prod(s.shape))
+        for s in jax.tree.leaves(param_specs(cfg), is_leaf=is_leaf_spec)
+    )
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: top-k of E experts) — the N in
+    MODEL_FLOPS = 6·N_active·D."""
+    total = 0
+    for path, s in jax.tree.flatten_with_path(
+        param_specs(cfg), is_leaf=is_leaf_spec
+    )[0]:
+        n = int(np.prod(s.shape))
+        if "experts" in s.dims and cfg.num_experts:
+            n = n * cfg.experts_per_token // cfg.num_experts
+        total += n
+    return total
+
+
+# -- entry points --------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, params, batch) -> jax.Array:
+    return _mod(cfg).forward(cfg, params, batch)
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> jax.Array:
+    """Mean next-token cross entropy (labels shifted here)."""
+    logits = forward(cfg, params, batch)
+    return cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    return _mod(cfg).prefill(cfg, params, batch)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    return _mod(cfg).decode_step(cfg, params, cache, tokens, pos)
+
+
+# -- caches ----------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Pytree:
+    return _mod(cfg).init_cache_specs(cfg, batch, seq_len)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> Pytree:
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        cache_specs(cfg, batch, seq_len),
+        is_leaf=is_leaf_spec,
+    )
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int) -> Pytree:
+    return tree_abstract(cache_specs(cfg, batch, seq_len))
+
+
+def cache_axes(cfg: ModelConfig, batch: int, seq_len: int) -> Pytree:
+    return tree_dims(cache_specs(cfg, batch, seq_len))

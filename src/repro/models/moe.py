@@ -1,0 +1,87 @@
+"""Mixture-of-Experts block: GShard-style grouped dispatch/combine.
+
+Token-choice top-k routing with per-group expert capacity.  The grouped
+einsum formulation is the one that lowers to clean all-to-alls under
+SPMD when the expert dimension is sharded (EP over the 'model' axis) —
+see DESIGN.md.  Group size is kept small (<= 512 tokens) so the
+dispatch/combine einsums stay <5% of expert FLOPs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import LeafSpec, activate
+
+
+def moe_param_specs(cfg: ModelConfig) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    specs = {
+        "router": LeafSpec((D, E), ("embed", "none")),
+        "w_up": LeafSpec((E, D, F), ("experts", "embed", "mlp")),
+        "w_down": LeafSpec((E, F, D), ("experts", "mlp", "embed")),
+    }
+    if cfg.gated_mlp:
+        specs["w_gate"] = LeafSpec((E, D, F), ("experts", "embed", "mlp"))
+    return specs
+
+
+def _capacity(group_tokens: int, k: int, num_experts: int, cf: float) -> int:
+    c = int(group_tokens * k * cf / num_experts) + 1
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def moe_block(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    group = min(cfg.moe_group, B * S)
+    n_groups = (B * S) // group
+    xt = x.reshape(n_groups, group, D)
+
+    # --- routing (fp32) ---------------------------------------------------
+    logits = jnp.einsum(
+        "gsd,de->gse", xt, p["router"], preferred_element_type=jnp.float32
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                     # (g, s, k)
+    gate = gate / (gate.sum(-1, keepdims=True) + 1e-9)
+
+    # --- capacity + positions (exact integer bookkeeping) -------------------
+    C = _capacity(group, k, E, cfg.capacity_factor)
+    sel = jax.nn.one_hot(idx, E, dtype=jnp.int32)           # (g, s, k, E)
+    selflat = sel.reshape(n_groups, group * k, E)
+    pos = jnp.cumsum(selflat, axis=1) - selflat             # slot within expert
+    keep = (pos < C) & (selflat > 0)                        # (g, s*k, E)
+    slot = jax.nn.one_hot(pos, C, dtype=jnp.bfloat16)       # (g, s*k, E, C)
+    # (g, s, k, E, C): 1 where (token, choice) landed a capacity slot
+    keep_slot = (keep[..., None].astype(jnp.bfloat16) * slot).reshape(
+        n_groups, group, k, E, C
+    )
+    dispatch = keep_slot.sum(axis=2)                        # (g, s, E, C)
+    # combine weights: gate value of the (token, choice) that landed a slot
+    combine = jnp.einsum(
+        "gsk,gskec->gsec", gate.astype(jnp.bfloat16), keep_slot
+    )
+
+    # --- dispatch -> expert compute -> combine ------------------------------
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xt)
+    up = jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    if cfg.gated_mlp:
+        gatep = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
+        h = activate(gatep, cfg.mlp_activation) * up
+    else:
+        h = activate(up, cfg.mlp_activation)
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye)
+    return out.reshape(B, S, D)
+
+
+def moe_flops_per_token(cfg: ModelConfig) -> int:
+    """Active-path matmul FLOPs per token for one MoE block (fwd)."""
+    n_mats = 3 if cfg.gated_mlp else 2
+    return int(
+        2 * cfg.d_model * cfg.d_ff * n_mats * cfg.experts_per_token
+        + 2 * cfg.d_model * cfg.num_experts  # router
+    )

@@ -1,0 +1,337 @@
+"""RWKV6 "Finch" — attention-free token mixing with data-dependent decay.
+
+The wkv state is a per-head (hd × hd) outer-product accumulator with a
+data-dependent diagonal decay (the paper's headline feature), so decode
+is O(d) per token independent of context length — this is why rwkv6
+runs the long_500k cell trivially.
+
+Training/prefill use a ``lax.scan`` over time carrying
+(prev-token embeddings, wkv state); decode is a single step of the same
+function, guaranteeing train/serve consistency (tested).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import LeafSpec, layer_norm
+
+
+def rwkv_param_specs(cfg: ModelConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    L = cfg.rwkv_decay_lora
+    att = {
+        # token-shift mixing coefficients for r, k, v, w, g
+        "mu": LeafSpec((5, D), ("none", "embed"), init="zeros"),
+        "w0": LeafSpec((D,), ("embed",), init="zeros", dtype=jnp.float32),
+        "wA": LeafSpec((D, L), ("embed", "lora")),
+        "wB": LeafSpec((L, D), ("lora", "embed"), init="zeros"),
+        "Wr": LeafSpec((D, D), ("embed", "heads")),
+        "Wk": LeafSpec((D, D), ("embed", "heads")),
+        "Wv": LeafSpec((D, D), ("embed", "heads")),
+        "Wg": LeafSpec((D, D), ("embed", "heads")),
+        "u": LeafSpec((H, hd), ("none", "none"), dtype=jnp.float32),
+        "Wo": LeafSpec((D, D), ("heads", "embed")),
+        "ln_x": LeafSpec((D,), ("embed",), init="ones"),
+        "ln_x_b": LeafSpec((D,), ("embed",), init="zeros"),
+    }
+    ffn = {
+        "mu_k": LeafSpec((D,), ("embed",), init="zeros"),
+        "mu_r": LeafSpec((D,), ("embed",), init="zeros"),
+        "Wk": LeafSpec((D, F), ("embed", "mlp")),
+        "Wv": LeafSpec((F, D), ("mlp", "embed")),
+        "Wr": LeafSpec((D, D), ("embed", "heads")),
+    }
+    return {"att": att, "ffn": ffn}
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> dict:
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    D = cfg.d_model
+    return {
+        "x_att": jnp.zeros((batch, D), jnp.bfloat16),
+        "x_ffn": jnp.zeros((batch, D), jnp.bfloat16),
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+    }
+
+
+def _heads(x, H, hd):
+    return x.reshape(*x.shape[:-1], H, hd)
+
+
+def time_mix_step(x, x_prev, wkv, p, cfg: ModelConfig):
+    """One token of RWKV6 time mixing.  x, x_prev: (B, D)."""
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    xx = (x_prev - x).astype(x.dtype)                       # token-shift delta
+    mu = p["mu"].astype(x.dtype)                            # (5, D)
+    xr, xk, xv, xw, xg = (x + xx * mu[i] for i in range(5))
+
+    r = _heads(xr @ p["Wr"], H, hd).astype(jnp.float32)
+    k = _heads(xk @ p["Wk"], H, hd).astype(jnp.float32)
+    v = _heads(xv @ p["Wv"], H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["Wg"])
+
+    # data-dependent decay (low-rank): w in (0, 1)
+    lora = jnp.tanh((xw @ p["wA"]).astype(jnp.float32)) @ p["wB"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(p["w0"] + lora))                   # (B, D)
+    w = _heads(w, H, hd)                                    # (B, H, hd)
+
+    kv = k[..., :, None] * v[..., None, :]                  # (B, H, hd, hd)
+    # out_j = sum_i r_i * (wkv_ij + u_i * kv_ij)
+    att = jnp.einsum("bhi,bhij->bhj", r, wkv + p["u"][..., None] * kv)
+    wkv = w[..., None] * wkv + kv                           # decay keys dim
+    out = att.reshape(x.shape[0], -1).astype(x.dtype)
+    out = layer_norm(out, p["ln_x"], p["ln_x_b"])
+    return (out * g) @ p["Wo"], wkv
+
+
+def channel_mix_step(x, x_prev, p):
+    xx = (x_prev - x).astype(x.dtype)
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["Wk"]))
+    return jax.nn.sigmoid(xr @ p["Wr"]) * (k @ p["Wv"])
+
+
+def rwkv_layer_step(x, state, p, cfg: ModelConfig, ln1, ln2):
+    """One token through one RWKV layer.  x: (B, D)."""
+    from repro.models.common import rms_norm
+
+    h = rms_norm(x, ln1)
+    att, wkv = time_mix_step(h, state["x_att"], state["wkv"], p["att"], cfg)
+    x = x + att
+    h2 = rms_norm(x, ln2)
+    x = x + channel_mix_step(h2, state["x_ffn"], p["ffn"])
+    new_state = {
+        "x_att": h.astype(jnp.bfloat16),
+        "x_ffn": h2.astype(jnp.bfloat16),
+        "wkv": wkv,
+    }
+    return x, new_state
+
+
+def rwkv_layer_sequence(x, p, cfg: ModelConfig, ln1, ln2):
+    """Full-sequence form via scan over time.  x: (B, S, D)."""
+    B, S, D = x.shape
+    state0 = init_rwkv_state(cfg, B)
+
+    def body(state, t):
+        out, state = rwkv_layer_step(x[:, t], state, p, cfg, ln1, ln2)
+        return state, out
+
+    _, ys = lax.scan(body, state0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1)                           # (B, S, D)
+
+
+# ---------------------------------------------------------------------------
+# Model entry points (ssm family)
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    from repro.models.common import stacked
+
+    D = cfg.d_model
+    block = rwkv_param_specs(cfg)
+    block["ln1"] = LeafSpec((D,), ("embed",), init="ones")
+    block["ln2"] = LeafSpec((D,), ("embed",), init="ones")
+    return {
+        "embed": LeafSpec((cfg.vocab_size, D), ("vocab", "embed")),
+        "layers": jax.tree.map(
+            lambda s: stacked(cfg.num_layers, s),
+            block,
+            is_leaf=lambda x: isinstance(x, LeafSpec),
+        ),
+        "final_norm": LeafSpec((D,), ("embed",), init="ones"),
+        "lm_head": LeafSpec((D, cfg.vocab_size), ("embed", "vocab")),
+    }
+
+
+def _scan_layers(cfg, params, x, fn):
+    if cfg.remat == "full":
+        fn = jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return lax.scan(fn, x, params["layers"])
+
+
+def forward(cfg: ModelConfig, params, batch) -> jax.Array:
+    from repro.models.common import rms_norm
+
+    x = params["embed"][batch["tokens"]]                    # (B, S, D)
+    S = x.shape[1]
+    use_chunked = cfg.rwkv_chunk > 0 and S % min(cfg.rwkv_chunk, S) == 0
+
+    def body(x, lp):
+        if use_chunked:
+            return rwkv_layer_chunked(x, lp, cfg, lp["ln1"], lp["ln2"],
+                                      chunk=cfg.rwkv_chunk), None
+        return rwkv_layer_sequence(x, lp, cfg, lp["ln1"], lp["ln2"]), None
+
+    x, _ = _scan_layers(cfg, params, x, body)
+    x = rms_norm(x, params["final_norm"])
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    """Returns (last-token logits, per-layer decode state)."""
+    from repro.models.common import rms_norm
+
+    x = params["embed"][batch["tokens"]]
+    B, S, D = x.shape
+
+    def body(x, lp):
+        state0 = init_rwkv_state(cfg, B)
+
+        def step(st, t):
+            out, st = rwkv_layer_step(x[:, t], st, lp, cfg, lp["ln1"], lp["ln2"])
+            return st, out
+
+        stN, ys = lax.scan(step, state0, jnp.arange(S))
+        return jnp.moveaxis(ys, 0, 1), stN
+
+    x, cache = _scan_layers(cfg, params, x, body)
+    x = rms_norm(x, params["final_norm"])
+    return jnp.einsum("bsd,dv->bsv", x[:, -1:], params["lm_head"]), cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    from repro.models.common import rms_norm
+
+    x = params["embed"][tokens]                             # (B, D)
+
+    def body(x, lp_st):
+        lp, st = lp_st
+        out, st = rwkv_layer_step(x, st, lp, cfg, lp["ln1"], lp["ln2"])
+        return out, st
+
+    x, new_cache = lax.scan(body, x, (params["layers"], cache))
+    x = rms_norm(x, params["final_norm"])
+    return jnp.einsum("bd,dv->bv", x, params["lm_head"]), new_cache
+
+
+def init_cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """RWKV decode state is O(1) in seq_len — the long_500k enabler."""
+    from repro.models.common import stacked
+
+    H, hd, D = cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.d_model
+    block = {
+        "x_att": LeafSpec((batch, D), ("batch", "embed"), init="zeros"),
+        "x_ffn": LeafSpec((batch, D), ("batch", "embed"), init="zeros"),
+        "wkv": LeafSpec(
+            (batch, H, hd, hd), ("batch", "heads", "none", "none"),
+            init="zeros", dtype=jnp.float32,
+        ),
+    }
+    return jax.tree.map(
+        lambda s: stacked(cfg.num_layers, s),
+        block,
+        is_leaf=lambda x: isinstance(x, LeafSpec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Chunked (matmul-form) wkv — §Perf hillclimb for train/prefill
+# ---------------------------------------------------------------------------
+#
+# The step-scan form runs 4096 sequential (B, D)-sized ops per layer —
+# hopelessly memory-bound on TPU (measured t_mem = 1.5e4 s for
+# rwkv6-1.6b/train_4k).  The chunked form processes CH tokens at a time:
+# within a chunk, decays are composed in log space and the wkv
+# contribution becomes two (CH × CH)/(CH × hd) matmuls on the MXU;
+# across chunks a single (hd × hd) state carries.  exp() arguments are
+# differences of cumulative log-decays with i >= j, so every factor is
+# <= 1 — numerically safe.  Validated against the step form.
+
+
+def _time_mix_chunked(x, p, cfg: ModelConfig, chunk: int):
+    """x: (B, S, D) pre-normed inputs -> (B, S, D) time-mix output.
+
+    Scheme: parallel-over-chunks, sequential-within-chunk.  The inner
+    scan runs CH steps but processes all S/CH chunks at once (width
+    B·nc·H·hd — VPU/MXU friendly), assuming zero initial state; a tiny
+    nc-step scan then composes the true chunk-entry states, and the
+    inter-chunk correction r_t · (exp(ae_t) ⊙ S_entry) is one batched
+    matmul.  exp arguments are always <= 0, so no overflow — and the
+    per-chunk arithmetic is identical to the step form (tested).
+    """
+    B, S, D = x.shape
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    CH = min(chunk, S)
+    assert S % CH == 0
+    nc = S // CH
+    mu = p["mu"].astype(x.dtype)
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    xx = x_prev - x
+    xr, xk, xv, xw, xg = (x + xx * mu[i] for i in range(5))
+
+    def heads5(t):
+        return t.reshape(B, nc, CH, H, hd)
+
+    r = heads5((xr @ p["Wr"]).astype(jnp.float32))
+    k = heads5((xk @ p["Wk"]).astype(jnp.float32))
+    v = heads5((xv @ p["Wv"]).astype(jnp.float32))
+    g = jax.nn.silu(xg @ p["Wg"])
+    lora = jnp.tanh((xw @ p["wA"]).astype(jnp.float32)) @ p["wB"].astype(
+        jnp.float32
+    )
+    logw = heads5(-jnp.exp(p["w0"] + lora))             # <= 0 everywhere
+    u = p["u"]                                          # (H, hd)
+
+    a_incl = jnp.cumsum(logw, axis=2)                   # (B,nc,CH,H,hd)
+    a_excl = a_incl - logw
+
+    # --- intra-chunk: CH sequential steps, all chunks in parallel -------
+    def step(S_i, inp):
+        r_t, k_t, v_t, w_t = inp                        # (B,nc,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]      # (B,nc,H,hd,hd)
+        out = jnp.einsum("bnhi,bnhij->bnhj", r_t, S_i + u[..., None] * kv)
+        S_i = jnp.exp(w_t)[..., None] * S_i + kv
+        return S_i, out
+
+    seq_major = lambda t: jnp.moveaxis(t, 2, 0)         # (CH,B,nc,H,hd)
+    S0 = jnp.zeros((B, nc, H, hd, hd), jnp.float32)
+    T_c, outs = lax.scan(step, S0, tuple(map(seq_major, (r, k, v, logw))))
+    out_intra = jnp.moveaxis(outs, 0, 2)                # (B,nc,CH,H,hd)
+
+    # --- chunk-entry states: nc-step scan of S' = d·S + T ----------------
+    d_c = jnp.exp(a_incl[:, :, -1])                     # (B,nc,H,hd)
+    T_seq = jnp.moveaxis(T_c, 1, 0)                     # (nc,B,H,hd,hd)
+    d_seq = jnp.moveaxis(d_c, 1, 0)
+
+    def compose(S_c, inp):
+        d, T = inp
+        return d[..., None] * S_c + T, S_c              # emit ENTRY state
+
+    _, S_entry = lax.scan(compose, jnp.zeros((B, H, hd, hd), jnp.float32),
+                          (d_seq, T_seq))
+    S_entry = jnp.moveaxis(S_entry, 0, 1)               # (B,nc,H,hd,hd)
+
+    # --- inter-chunk correction (one batched matmul) ----------------------
+    r_dec = r * jnp.exp(a_excl)                         # exp(<=0)
+    out_inter = jnp.einsum("bnchi,bnhij->bnchj", r_dec, S_entry)
+
+    out = (out_intra + out_inter).reshape(B, S, H * hd).astype(x.dtype)
+    out = layer_norm(out, p["ln_x"], p["ln_x_b"])
+    return (out * g) @ p["Wo"]
+
+
+def _channel_mix_seq(x, p):
+    """Full-sequence channel mix (token shift via pad)."""
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    xx = x_prev - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["Wk"]))
+    return jax.nn.sigmoid(xr @ p["Wr"]) * (k @ p["Wv"])
+
+
+def rwkv_layer_chunked(x, p, cfg: ModelConfig, ln1, ln2, chunk: int = 128):
+    """Full layer in chunked/matmul form.  x: (B, S, D)."""
+    from repro.models.common import rms_norm
+
+    h = rms_norm(x, ln1)
+    x = x + _time_mix_chunked(h, p["att"], cfg, chunk)
+    h2 = rms_norm(x, ln2)
+    return x + _channel_mix_seq(h2, p["ffn"])

@@ -1,0 +1,417 @@
+"""Decoder-only transformer covering the dense / moe / vlm / hybrid families.
+
+Layers are stacked for ``lax.scan`` over *period blocks* so heterogeneous
+interleaves stay scan-able (small HLO, bounded compile time at 512
+devices):
+
+  - uniform archs: period 1 (attn + mlp/moe)
+  - llama4: period 2 (dense mlp layer, then MoE layer)
+  - jamba: period 8 (7 mamba + 1 attention; MoE on odd layers)
+
+Entry points: ``forward`` (train), ``prefill`` (forward + cache emit),
+``decode_step`` (one token against a KV cache).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba as mamba_mod
+from repro.models.common import (
+    LeafSpec,
+    activate,
+    apply_rope,
+    attention,
+    rms_norm,
+    stacked,
+    windowed_prefill_attention,
+)
+
+# ---------------------------------------------------------------------------
+# Period-block layout
+# ---------------------------------------------------------------------------
+
+
+def block_period(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.attn_period
+    if cfg.is_moe and cfg.moe_interleave > 1:
+        return cfg.moe_interleave
+    return 1
+
+
+def sublayer_kinds(cfg: ModelConfig) -> list[tuple[str, str]]:
+    """[(mixer, mlp)] for each layer j inside a period block."""
+    period = block_period(cfg)
+    out = []
+    for j in range(period):
+        if cfg.family == "hybrid":
+            mixer = "attn" if j == period - 1 else "mamba"
+        else:
+            mixer = "attn"
+        if cfg.is_moe and (j % cfg.moe_interleave == cfg.moe_interleave - 1):
+            mlp = "moe"
+        else:
+            mlp = "mlp"
+        out.append((mixer, mlp))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+def attn_param_specs(cfg: ModelConfig) -> dict:
+    D, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": LeafSpec((D, H, hd), ("embed", "heads", "head_dim")),
+        "wk": LeafSpec((D, K, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": LeafSpec((D, K, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": LeafSpec((H, hd, D), ("heads", "head_dim", "embed")),
+    }
+
+
+def mlp_param_specs(cfg: ModelConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    specs = {
+        "w_up": LeafSpec((D, F), ("embed", "mlp")),
+        "w_down": LeafSpec((F, D), ("mlp", "embed")),
+    }
+    if cfg.gated_mlp:
+        specs["w_gate"] = LeafSpec((D, F), ("embed", "mlp"))
+    return specs
+
+
+def _block_specs(cfg: ModelConfig) -> dict:
+    from repro.models.moe import moe_param_specs
+
+    D = cfg.d_model
+    block: dict[str, Any] = {}
+    for j, (mixer, mlp) in enumerate(sublayer_kinds(cfg)):
+        if mixer == "attn":
+            block[f"attn_{j}"] = attn_param_specs(cfg)
+        else:
+            block[f"mamba_{j}"] = mamba_mod.mamba_param_specs(cfg)
+        block[f"norm1_{j}"] = LeafSpec((D,), ("embed",), init="ones")
+        if mlp == "moe":
+            block[f"moe_{j}"] = moe_param_specs(cfg)
+        else:
+            block[f"mlp_{j}"] = mlp_param_specs(cfg)
+        if not cfg.parallel_block:
+            block[f"norm2_{j}"] = LeafSpec((D,), ("embed",), init="ones")
+    return block
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    n_periods = cfg.num_layers // block_period(cfg)
+    block = _block_specs(cfg)
+    specs: dict[str, Any] = {
+        "embed": LeafSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed")),
+        "layers": jax.tree.map(
+            lambda s: stacked(n_periods, s),
+            block,
+            is_leaf=lambda x: isinstance(x, LeafSpec),
+        ),
+        "final_norm": LeafSpec((cfg.d_model,), ("embed",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = LeafSpec(
+            (cfg.d_model, cfg.vocab_size), ("embed", "vocab")
+        )
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Sub-layer application
+# ---------------------------------------------------------------------------
+
+
+def _qkv(x, ap, cfg, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, ap["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, ap["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, ap["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attn_seq(x, ap, cfg: ModelConfig, *, causal=True, emit_cache=False):
+    """Full-sequence attention sublayer.  x: (B, S, D)."""
+    from repro.sharding.rules import active_layout, shard_hint
+
+    B, S, D = x.shape
+    positions = jnp.arange(S)
+    q, k, v = _qkv(x, ap, cfg, positions)
+    W, c = cfg.sliding_window, cfg.attn_chunk
+    if active_layout(cfg).startswith("sp"):
+        # Ulysses-style: queries stay sequence-sharded; K/V are gathered
+        # to full sequence (the per-layer all-gather is the SP cost).
+        assert not W, "SP layout + sliding window not combined (no arch needs it)"
+        k = shard_hint(k, "batch", "none", "none", "none")
+        v = shard_hint(v, "batch", "none", "none", "none")
+        out = attention(q, k, v, causal=causal, chunk=0,
+                        scores_bf16=cfg.sp_scores_bf16)
+    elif W and S > W + c:
+        out = windowed_prefill_attention(q, k, v, window=W, chunk=c)
+    else:
+        out = attention(q, k, v, causal=causal, window=W, chunk=c)
+    out = jnp.einsum("bshk,hkd->bsd", out, ap["wo"])
+    if emit_cache:
+        Sc = min(S, cfg.max_decode_window) if cfg.max_decode_window else S
+        kc, vc = k[:, -Sc:], v[:, -Sc:]
+        if Sc < S and S % Sc:
+            # rolling cache invariant: position p lives at slot p % Sc
+            kc = jnp.roll(kc, S % Sc, axis=1)
+            vc = jnp.roll(vc, S % Sc, axis=1)
+        return out, {"k": kc, "v": vc}
+    return out
+
+
+def _attn_decode(x, ap, cfg: ModelConfig, cache, pos):
+    """One-token attention against the cache.  x: (B, 1, D)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, ap["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, ap["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, ap["wv"])
+    ppos = jnp.full((1,), pos)
+    q = apply_rope(q, ppos, cfg.rope_theta)
+    k = apply_rope(k, ppos, cfg.rope_theta)
+    S_cache = cache["k"].shape[1]
+    slot = pos % S_cache if cfg.max_decode_window else jnp.minimum(pos, S_cache - 1)
+    ck = lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    valid = jnp.minimum(pos + 1, S_cache)
+    out = attention(
+        q, ck, cv, causal=False, kv_valid_len=valid, q_positions=ppos
+    )
+    out = jnp.einsum("bshk,hkd->bsd", out, ap["wo"])
+    return out, {"k": ck, "v": cv}
+
+
+def _mlp(x, mp, cfg: ModelConfig):
+    up = x @ mp["w_up"]
+    if cfg.gated_mlp:
+        h = activate(x @ mp["w_gate"], cfg.mlp_activation) * up
+    else:
+        h = activate(up, cfg.mlp_activation)
+    return h @ mp["w_down"]
+
+
+def _mix_mlp(x, bp, j, mlp_kind, cfg):
+    from repro.models.moe import moe_block
+
+    if mlp_kind == "moe":
+        return moe_block(x, bp[f"moe_{j}"], cfg)
+    return _mlp(x, bp[f"mlp_{j}"], cfg)
+
+
+# ---------------------------------------------------------------------------
+# Period block: sequence (train/prefill) and decode forms
+# ---------------------------------------------------------------------------
+
+
+def block_seq(x, bp, cfg: ModelConfig, *, emit_cache: bool):
+    """x: (B, S, D) through one period block; returns (x, cache|None)."""
+    from repro.sharding.rules import shard_hint
+
+    x = shard_hint(x, "batch", _seq_dim(cfg), "none")
+    cache: dict[str, Any] = {}
+    for j, (mixer, mlp_kind) in enumerate(sublayer_kinds(cfg)):
+        h = rms_norm(x, bp[f"norm1_{j}"])
+        if mixer == "attn":
+            if emit_cache:
+                mixed, c = _attn_seq(x=h, ap=bp[f"attn_{j}"], cfg=cfg, emit_cache=True)
+                cache[f"k_{j}"], cache[f"v_{j}"] = c["k"], c["v"]
+            else:
+                mixed = _attn_seq(h, bp[f"attn_{j}"], cfg)
+        else:
+            mixed = mamba_mod.mamba_block(h, bp[f"mamba_{j}"], cfg)
+            if emit_cache:
+                st = mamba_prefill_state(h, bp[f"mamba_{j}"], cfg)
+                cache[f"mconv_{j}"], cache[f"mssm_{j}"] = st["conv"], st["ssm"]
+        if cfg.parallel_block:
+            x = x + mixed + _mix_mlp(h, bp, j, mlp_kind, cfg)
+        else:
+            x = x + mixed
+            h2 = rms_norm(x, bp[f"norm2_{j}"])
+            x = x + _mix_mlp(h2, bp, j, mlp_kind, cfg)
+    return x, (cache if emit_cache else None)
+
+
+def mamba_prefill_state(h, mp, cfg: ModelConfig):
+    """Recompute the mamba decode state after a prefill pass.
+
+    Cheap relative to the block itself: re-runs in/conv projections and
+    the scan to the final hidden state.
+    """
+    B, S, D = h.shape
+    xz = h @ mp["in_proj"]
+    x_in, _ = jnp.split(xz, 2, axis=-1)
+    w = cfg.mamba_d_conv
+    conv_win = x_in[:, S - (w - 1):, :].astype(jnp.bfloat16)
+    x_c = jax.nn.silu(
+        mamba_mod.causal_depthwise_conv(x_in, mp["conv_w"], mp["conv_b"])
+    )
+    dt, Bm, Cm = mamba_mod._ssm_inputs(x_c, mp, cfg)
+    A = -jnp.exp(mp["A_log"])
+
+    def body(hh, t):
+        hh, _ = mamba_mod._ssm_step(hh, dt[:, t], Bm[:, t], Cm[:, t], x_c[:, t], A)
+        return hh, None
+
+    h0 = jnp.zeros((B, cfg.mamba_d_inner, cfg.mamba_d_state), jnp.float32)
+    hN, _ = lax.scan(body, h0, jnp.arange(S))
+    return {"conv": conv_win, "ssm": hN}
+
+
+def block_decode(x, bp, bc, cfg: ModelConfig, pos):
+    """One token through one period block.  x: (B, 1, D)."""
+    new_cache: dict[str, Any] = {}
+    for j, (mixer, mlp_kind) in enumerate(sublayer_kinds(cfg)):
+        h = rms_norm(x, bp[f"norm1_{j}"])
+        if mixer == "attn":
+            mixed, c = _attn_decode(
+                h, bp[f"attn_{j}"], cfg, {"k": bc[f"k_{j}"], "v": bc[f"v_{j}"]}, pos
+            )
+            new_cache[f"k_{j}"], new_cache[f"v_{j}"] = c["k"], c["v"]
+        else:
+            st = {"conv": bc[f"mconv_{j}"], "ssm": bc[f"mssm_{j}"]}
+            out2d, st = mamba_mod.mamba_decode_step(h[:, 0], st, bp[f"mamba_{j}"], cfg)
+            mixed = out2d[:, None, :]
+            new_cache[f"mconv_{j}"], new_cache[f"mssm_{j}"] = st["conv"], st["ssm"]
+        if cfg.parallel_block:
+            x = x + mixed + _mix_mlp(h, bp, j, mlp_kind, cfg)
+        else:
+            x = x + mixed
+            h2 = rms_norm(x, bp[f"norm2_{j}"])
+            x = x + _mix_mlp(h2, bp, j, mlp_kind, cfg)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model entry points
+# ---------------------------------------------------------------------------
+
+
+def _seq_dim(cfg: ModelConfig) -> str:
+    from repro.sharding.rules import active_layout
+
+    return "seq" if active_layout(cfg).startswith("sp") else "none"
+
+
+def _embed_in(cfg: ModelConfig, params, batch):
+    from repro.sharding.rules import shard_hint
+
+    if cfg.input_mode == "embeddings" and "embeds" in batch:
+        x = batch["embeds"].astype(jnp.bfloat16)
+    else:
+        x = params["embed"][batch["tokens"]]
+    return shard_hint(x, "batch", _seq_dim(cfg), "none")
+
+
+def _lm_head(cfg: ModelConfig, params, x):
+    from repro.sharding.rules import shard_hint
+
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    sd = _seq_dim(cfg)
+    return shard_hint(logits, "batch", sd, "none" if sd == "seq" else "vocab")
+
+
+def _scan_blocks(cfg, params, x, fn):
+    if cfg.remat == "full":
+        fn = jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    G = cfg.remat_group
+    n_periods = cfg.num_layers // block_period(cfg)
+    if G > 1 and n_periods % G == 0 and n_periods > G:
+        # sqrt-L nested remat: only every G-th layer boundary is saved;
+        # the backward recomputes one G-span at a time.
+        grouped = jax.tree.map(
+            lambda a: a.reshape(n_periods // G, G, *a.shape[1:]),
+            params["layers"],
+        )
+
+        @jax.checkpoint
+        def outer(x, gp):
+            x, _ = lax.scan(fn, x, gp)
+            return x, None
+
+        x, _ = lax.scan(outer, x, grouped)
+        return x, None
+    return lax.scan(fn, x, params["layers"])
+
+
+def forward(cfg: ModelConfig, params, batch) -> jax.Array:
+    x = _embed_in(cfg, params, batch)
+
+    def body(x, bp):
+        x, _ = block_seq(x, bp, cfg, emit_cache=False)
+        return x, None
+
+    x, _ = _scan_blocks(cfg, params, x, body)
+    x = rms_norm(x, params["final_norm"])
+    return _lm_head(cfg, params, x)
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    x = _embed_in(cfg, params, batch)
+
+    def body(x, bp):
+        return block_seq(x, bp, cfg, emit_cache=True)
+
+    x, cache = _scan_blocks(cfg, params, x, body)
+    x = rms_norm(x, params["final_norm"])
+    return _lm_head(cfg, params, x[:, -1:]), cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """tokens: (B,) int32; pos: scalar int32.  Returns (logits, cache)."""
+    x = params["embed"][tokens][:, None, :]                 # (B, 1, D)
+
+    def body(x, bp_bc):
+        bp, bc = bp_bc
+        return block_decode(x, bp, bc, cfg, pos)
+
+    if cfg.remat == "full":
+        pass  # no grads in decode; remat irrelevant
+    x, new_cache = lax.scan(body, x, (params["layers"], cache))
+    x = rms_norm(x, params["final_norm"])
+    return _lm_head(cfg, params, x)[:, 0], new_cache
+
+
+def init_cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """LeafSpecs for the decode cache (shapes + logical dims)."""
+    n_periods = cfg.num_layers // block_period(cfg)
+    Sc = min(seq_len, cfg.max_decode_window) if cfg.max_decode_window else seq_len
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    di, n, w = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    block: dict[str, LeafSpec] = {}
+    for j, (mixer, _) in enumerate(sublayer_kinds(cfg)):
+        if mixer == "attn":
+            block[f"k_{j}"] = LeafSpec(
+                (batch, Sc, K, hd), ("batch", "kv_seq", "kv_heads", "head_dim"),
+                init="zeros",
+            )
+            block[f"v_{j}"] = LeafSpec(
+                (batch, Sc, K, hd), ("batch", "kv_seq", "kv_heads", "head_dim"),
+                init="zeros",
+            )
+        else:
+            block[f"mconv_{j}"] = LeafSpec(
+                (batch, w - 1, di), ("batch", "none", "mamba_inner"), init="zeros"
+            )
+            block[f"mssm_{j}"] = LeafSpec(
+                (batch, di, n), ("batch", "mamba_inner", "none"),
+                init="zeros", dtype=jnp.float32,
+            )
+    return jax.tree.map(
+        lambda s: stacked(n_periods, s),
+        block,
+        is_leaf=lambda x: isinstance(x, LeafSpec),
+    )

@@ -1,0 +1,145 @@
+"""Batched serving engine (prefill + decode with KV caches).
+
+Length-bucketed static batching: requests with equal prompt length share
+a prefill; the decode loop advances the whole batch one token per step
+against the donated cache.  FRAC-quantized KV caches (kbits dial) are a
+config option — the capacity↔fidelity trade from the paper applied to
+serving memory.  The SP-decode cache sharding (cache sequence dim over
+'model') comes from sharding/rules.py when a mesh is provided.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model
+from repro.models.common import greedy_sample
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (len,) int32
+    max_new_tokens: int = 16
+    output: list[int] = field(default_factory=list)
+    done: bool = False
+    t_submit: float = 0.0
+    t_first: float | None = None
+    t_done: float | None = None
+
+
+@dataclass
+class ServeStats:
+    requests: int = 0
+    tokens: int = 0
+    prefills: int = 0
+    decode_steps: int = 0
+    ttft_s: list[float] = field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, mcfg: ModelConfig, params, *, max_batch: int = 8,
+                 eos_id: int | None = None):
+        self.mcfg = mcfg
+        self.params = params
+        self.max_batch = max_batch
+        self.eos_id = eos_id
+        self._queue: list[Request] = []
+        self._next_rid = 0
+        self.stats = ServeStats()
+        self._prefill = jax.jit(lambda p, b: model.prefill(mcfg, p, b))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(mcfg, p, c, t, pos),
+            donate_argnums=(1,),
+        )
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                   max_new_tokens, t_submit=time.time()))
+        self.stats.requests += 1
+        return rid
+
+    def _next_bucket(self) -> list[Request]:
+        """Largest same-prompt-length group, up to max_batch."""
+        pending = [r for r in self._queue if not r.done]
+        if not pending:
+            return []
+        by_len: dict[int, list[Request]] = {}
+        for r in pending:
+            by_len.setdefault(len(r.prompt), []).append(r)
+        best = max(by_len.values(), key=len)
+        return best[: self.max_batch]
+
+    def run(self) -> dict[int, list[int]]:
+        """Serve every queued request to completion."""
+        while True:
+            bucket = self._next_bucket()
+            if not bucket:
+                break
+            self._serve_bucket(bucket)
+        return {r.rid: r.output for r in self._queue}
+
+    def _serve_bucket(self, bucket: list[Request]) -> None:
+        B = len(bucket)
+        S = len(bucket[0].prompt)
+        max_new = max(r.max_new_tokens for r in bucket)
+        prompts = jnp.asarray(np.stack([r.prompt for r in bucket]))
+        batch = {"tokens": prompts}
+        if self.mcfg.family == "audio":
+            batch["enc_embeds"] = jnp.zeros(
+                (B, self.mcfg.encoder_seq, self.mcfg.d_model), jnp.bfloat16
+            )
+        logits, cache = self._prefill(self.params, batch)
+        self.stats.prefills += 1
+        # grow cache to S + max_new slots
+        cache = self._grow_cache(cache, B, S, S + max_new)
+        tok = greedy_sample(logits[:, -1])
+        t_first = time.time()
+        for r, t in zip(bucket, np.asarray(tok)):
+            r.t_first = t_first
+            r.output.append(int(t))
+        alive = np.ones(B, bool)
+        for i in range(1, max_new):
+            pos = jnp.int32(S + i - 1)
+            logits, cache = self._decode(self.params, cache, tok, pos)
+            tok = greedy_sample(logits)
+            self.stats.decode_steps += 1
+            for bi, (r, t) in enumerate(zip(bucket, np.asarray(tok))):
+                if not alive[bi]:
+                    continue
+                r.output.append(int(t))
+                if self.eos_id is not None and int(t) == self.eos_id:
+                    alive[bi] = False
+                if len(r.output) >= r.max_new_tokens:
+                    alive[bi] = False
+            if not alive.any():
+                break
+        now = time.time()
+        for r in bucket:
+            r.done = True
+            r.t_done = now
+            self.stats.tokens += len(r.output)
+            self.stats.ttft_s.append(r.t_first - r.t_submit)
+
+    def _grow_cache(self, cache, B: int, cur: int, target: int):
+        """Pad prefill caches (built at prompt length) out to the decode
+        horizon.  Rolling (SWA) caches already have fixed window size."""
+        specs = model.cache_specs(self.mcfg, B, target)
+        from repro.models.common import is_leaf_spec
+
+        def grow(spec, leaf):
+            want = spec.shape
+            if leaf.shape == want:
+                return leaf
+            pads = [(0, w - h) for h, w in zip(leaf.shape, want)]
+            return jnp.pad(leaf, pads)
+
+        return jax.tree.map(grow, specs, cache,
+                            is_leaf=lambda x: is_leaf_spec(x))

@@ -1,0 +1,9 @@
+from repro.sharding.rules import (  # noqa: F401
+    batch_axes,
+    cache_shardings,
+    cache_spec,
+    input_sharding,
+    param_shardings,
+    spec_for_dims,
+    tree_shardings,
+)

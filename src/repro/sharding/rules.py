@@ -1,0 +1,237 @@
+"""Logical-axis → PartitionSpec rules (FSDP × TP × pod, divisibility-aware).
+
+Every parameter / cache LeafSpec carries logical dim names
+(see models/common.py).  These rules map them onto the production mesh:
+
+  - TP ('model' axis): first dim in TP_PRIORITY whose size divides the
+    axis — experts (EP) win over heads/mlp so MoE weights shard expert-
+    major; GQA kv_heads that don't divide fall back to replication
+    instead of failing (XLA rejects uneven shardings — verified).
+  - FSDP ('data' axis): the largest remaining eligible dim, ZeRO-3
+    style; XLA inserts all-gather on use / reduce-scatter on grads.
+  - batch ('pod','data'): greedy prefix product that divides.
+  - decode caches: kv_heads over 'model' when divisible, else the cache
+    sequence dim over every idle axis (jamba's 512k cache at batch=1
+    shards over data×model = 256-way).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import is_leaf_spec
+
+TP_PRIORITY = ("experts", "heads", "kv_heads", "mlp", "mamba_inner", "vocab")
+FSDP_ELIGIBLE = (
+    "embed", "mlp", "vocab", "experts", "mamba_inner", "heads", "kv_heads",
+)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)
+
+
+def spec_for_dims(
+    shape: tuple[int, ...],
+    dims: tuple[str, ...],
+    mesh: Mesh,
+    *,
+    fsdp_axis: str = "data",
+    tp_axis: str = "model",
+    layout: str = "tp",
+) -> P:
+    """Weight-sharding rule: one TP dim + one FSDP dim per tensor.
+
+    layout="sp" (sequence-parallel archs): the 'model' axis carries the
+    sequence, so weights only use it for the expert dim (EP); everything
+    else is FSDP-sharded.
+    """
+    assert len(shape) == len(dims), (shape, dims)
+    assign: list[Any] = [None] * len(shape)
+    tp = _axis_size(mesh, tp_axis)
+    dp = _axis_size(mesh, fsdp_axis)
+    if layout == "sp2" and "experts" in dims:
+        # 2D expert sharding: experts over the data axis (EP=DP — tokens
+        # all-to-all to their expert's owner), expert FFN over model.
+        # Expert weights become fully resident: no FSDP all-gather of
+        # the (97% of llama4) expert mass per layer.  §Perf iteration.
+        ei = dims.index("experts")
+        if dp > 1 and shape[ei] % dp == 0:
+            assign[ei] = fsdp_axis
+        mi = next((i for i, d in enumerate(dims)
+                   if d == "mlp" and shape[i] % tp == 0), None)
+        if mi is not None and tp > 1:
+            assign[mi] = tp_axis
+        return P(*assign)
+    priority = ("experts",) if layout in ("sp", "sp2") else TP_PRIORITY
+
+    if tp > 1:
+        for name in priority:
+            hit = next(
+                (
+                    i
+                    for i, (d, s) in enumerate(zip(dims, shape))
+                    if d == name and s % tp == 0
+                ),
+                None,
+            )
+            if hit is not None:
+                assign[hit] = tp_axis
+                break
+
+    if dp > 1:
+        cands = [
+            (s, i)
+            for i, (d, s) in enumerate(zip(dims, shape))
+            if assign[i] is None and d in FSDP_ELIGIBLE and s % dp == 0
+        ]
+        if cands:
+            _, i = max(cands)
+            assign[i] = fsdp_axis
+    return P(*assign)
+
+
+def batch_axes(mesh: Mesh, global_batch: int) -> tuple[str, ...]:
+    """Greedy prefix of ('pod','data') whose product divides the batch."""
+    axes: list[str] = []
+    prod = 1
+    for name in ("pod", "data"):
+        size = _axis_size(mesh, name)
+        if size > 1 and global_batch % (prod * size) == 0:
+            axes.append(name)
+            prod *= size
+    return tuple(axes)
+
+
+def cache_spec(
+    shape: tuple[int, ...], dims: tuple[str, ...], mesh: Mesh, global_batch: int
+) -> P:
+    """Decode-cache rule (see module docstring)."""
+    assign: list[Any] = [None] * len(shape)
+    baxes = batch_axes(mesh, global_batch)
+    used: set[str] = set()
+    for i, d in enumerate(dims):
+        if d == "batch" and baxes:
+            assign[i] = baxes if len(baxes) > 1 else baxes[0]
+            used |= set(baxes)
+            break
+    tp = _axis_size(mesh, "model")
+    kvh = next((i for i, d in enumerate(dims) if d == "kv_heads"), None)
+    kvs = next((i for i, d in enumerate(dims) if d == "kv_seq"), None)
+    if kvh is not None and tp > 1 and shape[kvh] % tp == 0:
+        assign[kvh] = "model"
+        used.add("model")
+    elif kvs is not None:
+        idle = [
+            a
+            for a in ("data", "model")
+            if a not in used and _axis_size(mesh, a) > 1
+        ]
+        prod = 1
+        take: list[str] = []
+        for a in idle:
+            if shape[kvs] % (prod * _axis_size(mesh, a)) == 0:
+                take.append(a)
+                prod *= _axis_size(mesh, a)
+        if take:
+            assign[kvs] = tuple(take) if len(take) > 1 else take[0]
+            used |= set(take)
+    # mamba / rwkv state dims
+    for i, (d, s) in enumerate(zip(dims, shape)):
+        if assign[i] is None and d in ("mamba_inner", "heads") and "model" not in used:
+            if tp > 1 and s % tp == 0:
+                assign[i] = "model"
+                used.add("model")
+    return P(*assign)
+
+
+def input_sharding(mesh: Mesh, shape, dims, global_batch: int) -> NamedSharding:
+    """Model inputs: batch-sharded, everything else replicated."""
+    baxes = batch_axes(mesh, global_batch)
+    spec = [None] * len(shape)
+    for i, d in enumerate(dims):
+        if d == "batch" and baxes:
+            spec[i] = baxes if len(baxes) > 1 else baxes[0]
+    return NamedSharding(mesh, P(*spec))
+
+
+def param_shardings(specs, mesh: Mesh, layout: str = "tp"):
+    """LeafSpec tree -> NamedSharding tree (weight rule)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(
+            mesh, spec_for_dims(s.shape, s.dims, mesh, layout=layout)
+        ),
+        specs,
+        is_leaf=is_leaf_spec,
+    )
+
+
+def cache_shardings(specs, mesh: Mesh, global_batch: int):
+    return jax.tree.map(
+        lambda s: NamedSharding(
+            mesh, cache_spec(s.shape, s.dims, mesh, global_batch)
+        ),
+        specs,
+        is_leaf=is_leaf_spec,
+    )
+
+
+def tree_shardings(tree, mesh: Mesh, spec_tree):
+    """Attach a PartitionSpec tree to an arbitrary pytree."""
+    return jax.tree.map(lambda _, sp: NamedSharding(mesh, sp), tree, spec_tree)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding hints (with_sharding_constraint anchors)
+# ---------------------------------------------------------------------------
+
+_ACT_TP_DIMS = (
+    "seq", "vocab", "heads", "kv_heads", "mlp", "mamba_inner", "experts",
+)
+
+
+def active_layout(cfg) -> str:
+    """Layout under the ambient (possibly abstract) mesh; 'tp' when no
+    mesh is set (smoke tests)."""
+    from repro.configs.base import resolve_layout
+
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return "tp"
+    tp = mesh.shape.get("model", 1)
+    return resolve_layout(cfg, tp) if tp > 1 else "tp"
+
+
+def shard_hint(x, *dims: str):
+    """Anchor an activation's sharding by logical dim names.
+
+    No-op outside a mesh context (smoke tests see one device), so model
+    code can call it unconditionally.  Dim vocabulary: 'batch' (data
+    parallel axes), the TP dims, or 'none'.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names or mesh.size <= 1:
+        return x
+    assert len(dims) == len(x.shape), (dims, x.shape)
+    spec: list = [None] * len(dims)
+    used: set[str] = set()
+    for i, (d, s) in enumerate(zip(dims, x.shape)):
+        if d == "batch":
+            axes: list[str] = []
+            prod = 1
+            for name in ("pod", "data"):
+                size = mesh.shape.get(name, 1)
+                if size > 1 and s % (prod * size) == 0:
+                    axes.append(name)
+                    prod *= size
+            if axes:
+                spec[i] = tuple(axes) if len(axes) > 1 else axes[0]
+                used |= set(axes)
+        elif d in _ACT_TP_DIMS and "model" not in used:
+            tp = mesh.shape.get("model", 1)
+            if tp > 1 and s % tp == 0:
+                spec[i] = "model"
+                used.add("model")
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,67 @@
+"""Elastic scaling: restart a job on a different mesh topology.
+
+Checkpoints are mesh-agnostic (host-layout arrays + logical-axis rules),
+so scaling is: restore with the *new* mesh's shardings and continue.
+``reshard_state`` is the core; ``plan_remesh`` sanity-checks that every
+parameter still divides under the new axis sizes (falling back to
+replication exactly like sharding/rules.py does).
+
+Straggler-driven shrink: when the StragglerDetector repeatedly flags a
+host, the controller can drop it from the device set, re-make the mesh
+one column smaller, and resume from the latest step — the data pipeline
+is stateless so re-sharding the batch stream is just re-slicing.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ModelConfig, resolve_layout
+from repro.models import model
+from repro.sharding.rules import param_shardings
+from repro.train.checkpoint import CheckpointManager
+
+
+def plan_remesh(cfg: ModelConfig, mesh) -> dict:
+    """Report how each weight class lands on the new mesh."""
+    from repro.models.common import is_leaf_spec
+    from repro.sharding.rules import spec_for_dims
+
+    layout = resolve_layout(cfg, mesh.shape.get("model", 1))
+    specs = model.param_specs(cfg)
+    n_sharded = n_replicated = 0
+    for s in jax.tree.leaves(specs, is_leaf=is_leaf_spec):
+        spec = spec_for_dims(s.shape, s.dims, mesh, layout=layout)
+        if any(a is not None for a in spec):
+            n_sharded += 1
+        else:
+            n_replicated += 1
+    return {"layout": layout, "sharded": n_sharded,
+            "replicated": n_replicated, "mesh": dict(mesh.shape)}
+
+
+def reshard_state(manager: CheckpointManager, cfg: ModelConfig, mesh,
+                  step: int | None = None):
+    """Restore the latest (or given) checkpoint onto `mesh`."""
+    import numpy as np
+
+    layout = resolve_layout(cfg, mesh.shape.get("model", 1))
+    p_specs = model.param_specs(cfg)
+    p_tpl = model.abstract_params(cfg)
+    p_shard = param_shardings(p_specs, mesh, layout)
+    opt_tpl = jax.tree.map(
+        lambda p: {"m": jax.ShapeDtypeStruct(p.shape, np.float32),
+                   "v": jax.ShapeDtypeStruct(p.shape, np.float32)},
+        p_tpl,
+    )
+    opt_shard = jax.tree.map(lambda s: {"m": s, "v": s}, p_shard)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    rep = NamedSharding(mesh, P())
+    tree, extra = manager.restore(
+        {"params": p_tpl,
+         "opt": {"mv": opt_tpl, "step": jax.ShapeDtypeStruct((), np.int32)}},
+        step,
+        shardings={"params": p_shard,
+                   "opt": {"mv": opt_shard, "step": rep}},
+    )
+    return tree["params"], tree["opt"], extra

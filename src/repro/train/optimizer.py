@@ -1,0 +1,109 @@
+"""AdamW, pure-pytree, FSDP-sharded (state mirrors param sharding).
+
+Two state precisions:
+  - fp32 (default): m, v in float32 — 8 bytes/param of optimizer state.
+  - frac8: m, v stored through the FRAC fractional-bit codec at 8 (i.e.
+    2^3-state-equivalent) levels-per-cell granularity — the paper's
+    capacity/precision dial applied to optimizer memory.  This is what
+    lets jamba-398B train on a single v5e-256 pod (DESIGN.md §8).
+
+The frac8 path quantizes per-tensor-block with error feedback carried in
+the (bf16) residual, so the update rule stays contractive.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"     # float32 | frac8
+    warmup_steps: int = 100
+
+
+def init_opt_state(params: Pytree, ocfg: AdamWConfig) -> Pytree:
+    if ocfg.state_dtype == "frac8":
+        from repro.core.frac.codec import frac_zeros_like
+
+        zeros = lambda p: {
+            "m": frac_zeros_like(p), "v": frac_zeros_like(p)
+        }
+        mv = jax.tree.map(zeros, params)
+    else:
+        mv = jax.tree.map(
+            lambda p: {
+                "m": jnp.zeros(p.shape, jnp.float32),
+                "v": jnp.zeros(p.shape, jnp.float32),
+            },
+            params,
+        )
+    return {"mv": mv, "step": jnp.zeros((), jnp.int32)}
+
+
+def _schedule(step, ocfg: AdamWConfig):
+    warm = jnp.minimum(step.astype(jnp.float32) / ocfg.warmup_steps, 1.0)
+    return ocfg.lr * warm
+
+
+def _global_norm(grads):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+
+
+def apply_updates(
+    params: Pytree, grads: Pytree, opt_state: Pytree, ocfg: AdamWConfig
+) -> tuple[Pytree, Pytree]:
+    """One AdamW step.  Returns (new_params, new_opt_state)."""
+    step = opt_state["step"] + 1
+    lr = _schedule(step, ocfg)
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, ocfg.grad_clip / (gnorm + 1e-9))
+
+    b1c = 1.0 - ocfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - ocfg.b2 ** step.astype(jnp.float32)
+
+    use_frac = ocfg.state_dtype == "frac8"
+    if use_frac:
+        from repro.core.frac.codec import frac_decode_tensor, frac_encode_tensor
+
+    def upd(p, g, mv):
+        g = g.astype(jnp.float32) * scale
+        if use_frac:
+            m_prev = frac_decode_tensor(mv["m"])
+            v_prev = frac_decode_tensor(mv["v"])
+        else:
+            m_prev, v_prev = mv["m"], mv["v"]
+        m = ocfg.b1 * m_prev + (1 - ocfg.b1) * g
+        v = ocfg.b2 * v_prev + (1 - ocfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + ocfg.eps)
+        if p.ndim >= 2:
+            delta = delta + ocfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        if use_frac:
+            new_mv = {"m": frac_encode_tensor(m), "v": frac_encode_tensor(v)}
+        else:
+            new_mv = {"m": m, "v": v}
+        return new_p, new_mv
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mv = treedef.flatten_up_to(opt_state["mv"])
+    out = [upd(p, g, mv) for p, g, mv in zip(flat_p, flat_g, flat_mv)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mv = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_params, {"mv": new_mv, "step": step}

@@ -1,0 +1,44 @@
+"""jit-able step functions (train / prefill / serve).
+
+These are the exact callables the dry-run lowers and the train loop /
+serve engine execute — one definition, every consumer.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model
+from repro.models.common import greedy_sample
+from repro.train.optimizer import AdamWConfig, apply_updates
+
+
+def make_train_step(cfg: ModelConfig, ocfg: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(cfg, p, batch)
+        )(params)
+        params, opt_state = apply_updates(params, grads, opt_state, ocfg)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(cfg, params, batch)
+        return greedy_sample(logits[:, -1]), cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = model.decode_step(cfg, params, cache, tokens, pos)
+        return greedy_sample(logits), cache
+
+    return serve_step

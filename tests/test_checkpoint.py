@@ -1,0 +1,93 @@
+"""Checkpoint manager: exact/frac modes, integrity, delta, GC, resume."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import CheckpointManager
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(32, 16)), jnp.float32),
+        "b": {"scale": jnp.asarray(rng.normal(size=(16,)), jnp.bfloat16)},
+        "step": jnp.int32(7),
+    }
+
+
+def test_exact_roundtrip(tmp_path):
+    m = CheckpointManager(str(tmp_path), mode="exact")
+    t = _tree()
+    m.save(10, t, extra={"data_step": 10})
+    t2, extra = m.restore(t)
+    assert extra["data_step"] == 10
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(t2)):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        assert (np.asarray(a) == np.asarray(b)).all()    # bit-exact
+
+
+def test_integrity_tamper_detected(tmp_path):
+    m = CheckpointManager(str(tmp_path), mode="exact", use_zstd=False)
+    t = _tree()
+    res = m.save(1, t)
+    # flip one byte of one shard
+    manifest = json.load(open(os.path.join(res.path, "manifest.json")))
+    entry = next(e for e in manifest["leaves"].values() if e["enc"] == "raw")
+    fpath = os.path.join(res.path, entry["file"])
+    blob = bytearray(open(fpath, "rb").read())
+    blob[0] ^= 0xFF
+    open(fpath, "wb").write(bytes(blob))
+    with pytest.raises(IOError, match="integrity"):
+        m.restore(t)
+
+
+def test_frac8_mode_error_bounded(tmp_path):
+    m = CheckpointManager(str(tmp_path), mode="frac8")
+    t = _tree()
+    m.save(1, t)
+    t2, _ = m.restore(t)
+    err = np.abs(np.asarray(t["w"]) - np.asarray(t2["w"])).max()
+    assert err < np.abs(np.asarray(t["w"])).max() / 255 * 1.05 + 1e-6
+
+
+def test_delta_snapshot_skips_unchanged(tmp_path):
+    m = CheckpointManager(str(tmp_path), mode="frac8", keep_n=10)
+    t = _tree()
+    m.save(1, t)                                   # full base
+    t_changed = dict(t)
+    t_changed["w"] = t["w"] + 1.0
+    res = m.save(2, t_changed, delta=True)
+    assert res.skipped_leaves == 2                 # b.scale and step unchanged
+    t2, _ = m.restore(t, step=2)
+    assert np.allclose(np.asarray(t2["w"]), np.asarray(t["w"]) + 1.0, atol=0.05)
+    assert (np.asarray(t2["b"]["scale"]) == np.asarray(t["b"]["scale"])).all() \
+        or np.allclose(np.asarray(t2["b"]["scale"], np.float32),
+                       np.asarray(t["b"]["scale"], np.float32), atol=0.02)
+
+
+def test_gc_keeps_n(tmp_path):
+    m = CheckpointManager(str(tmp_path), mode="exact", keep_n=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        m.save(s, t)
+    assert m.steps() == [3, 4]
+
+
+def test_async_save(tmp_path):
+    m = CheckpointManager(str(tmp_path), mode="exact")
+    t = _tree()
+    m.save(5, t, block=False)
+    m.wait()
+    assert m.latest_step() == 5
+    t2, _ = m.restore(t)
+    assert (np.asarray(t2["w"]) == np.asarray(t["w"])).all()
+
+
+def test_atomicity_no_tmp_left(tmp_path):
+    m = CheckpointManager(str(tmp_path), mode="exact")
+    m.save(1, _tree())
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))

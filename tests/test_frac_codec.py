@@ -1,0 +1,117 @@
+"""FRAC cell code + quantizer properties (paper §II-B, Fig 2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.frac import codec
+
+
+# --- code parameters ---------------------------------------------------------
+
+def test_bits_for_paper_examples():
+    # Fig 2(b): two 3-state cells store 3 bits
+    assert codec.bits_for(3, 2) == 3
+    # Fig 2(c)-consistent exact values (paper text is internally
+    # inconsistent here — see EXPERIMENTS.md)
+    assert codec.bits_for(3, 7) == 11
+    assert codec.bits_for(7, 5) == 14
+    assert codec.bits_for(5, 7) == 16
+
+
+def test_utilization_bounds():
+    for m in range(2, 17):
+        for a in range(1, 11):
+            u = codec.cell_utilization(m, a)
+            assert 0 < u <= 1.0
+
+
+def test_power_of_two_is_perfect():
+    for m in (2, 4, 8, 16):
+        assert codec.cell_utilization(m, 1) == 1.0
+
+
+def test_best_alpha_examples():
+    assert codec.best_alpha(3) == 7       # 93.65%
+    assert codec.best_alpha(7) == 5       # 97.5%
+
+
+def test_cells_for_bytes_tlc_page():
+    # a 4KB page at m=8 (TLC-equivalent) needs exactly 8·4096/3 cells
+    assert codec.cells_for_bytes(4096, 8, 1) == -(-4096 * 8 // 3)
+
+
+# --- bit packing ----------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.sampled_from([1, 3, 4, 7, 8, 11, 14, 16, 23]),
+    n=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pack_unpack_roundtrip(bits, n, seed):
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.integers(0, 1 << bits, n), jnp.uint32)
+    packed = codec.pack_bits(vals, bits)
+    assert packed.shape[0] == -(-n * bits // 32)
+    back = codec.unpack_bits(packed, bits, n)
+    assert (np.asarray(back) == np.asarray(vals)).all()
+
+
+# --- cell code (lossless on data bits) --------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(2, 16),
+    alpha=st.integers(1, 8),
+    n_words=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cell_code_roundtrip(m, alpha, n_words, seed):
+    rng = np.random.default_rng(seed)
+    data = jnp.asarray(rng.integers(0, 2**32, n_words, dtype=np.uint32))
+    nbits = n_words * 32
+    levels = codec.bits_to_levels(data, nbits, m, alpha)
+    assert int(np.asarray(levels).max(initial=0)) < m
+    back = codec.levels_to_bits(levels, m, alpha)
+    assert (np.asarray(back)[:n_words] == np.asarray(data)).all()
+
+
+def test_levels_use_expected_cell_count():
+    data = jnp.arange(8, dtype=jnp.uint32)
+    levels = codec.bits_to_levels(data, 256, 3, 7)   # 11 bits / 7 cells
+    n_codewords = -(-256 // 11)
+    assert levels.shape[0] == n_codewords * 7
+
+
+# --- quantizer ---------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    kbits=st.sampled_from([4, 6, 8]),
+    n=st.integers(10, 2000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantizer_error_bound(kbits, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=n), jnp.float32)
+    blob = codec.frac_encode_tensor(x, kbits=kbits)
+    back = codec.frac_decode_tensor(blob)
+    # per-block error bound: scale / (2^k - 1)
+    scales = np.asarray(blob["scales"])
+    bound = scales.max() / ((1 << kbits) - 1) * 1.01 + 1e-7
+    assert float(jnp.abs(back - x).max()) <= bound
+
+
+def test_encode_shapes_and_dtype_roundtrip():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(17, 33)), jnp.bfloat16)
+    blob = codec.frac_encode_tensor(x, kbits=8)
+    back = codec.frac_decode_tensor(blob)
+    assert back.shape == x.shape and back.dtype == x.dtype
+
+
+def test_compressed_bytes_ratio():
+    x = jnp.ones((4096,), jnp.float32)
+    blob = codec.frac_encode_tensor(x, kbits=8)
+    ratio = x.size * 4 / codec.compressed_bytes(blob)
+    assert ratio > 3.5          # ~4x minus scale overhead

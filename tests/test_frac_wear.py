@@ -1,0 +1,72 @@
+"""Wear / RBER / degradation models vs the paper's anchors (Fig 6, 2(d))."""
+import numpy as np
+import pytest
+
+from repro.core.frac import codec, policy, wear
+
+
+def test_fig6_rber_anchors():
+    # Fig 6: 6k P/E cycles on an aged chip: 0.6% / 0.9% / 1.4%
+    assert wear.rber(2, 6000) == pytest.approx(0.006, rel=0.05)
+    assert wear.rber(3, 6000) == pytest.approx(0.009, rel=0.10)
+    assert wear.rber(4, 6000) == pytest.approx(0.014, rel=0.05)
+
+
+def test_rber_monotonic_in_states_and_cycles():
+    for m in range(2, 8):
+        assert wear.rber(m + 1, 6000) > wear.rber(m, 6000)
+    for n in (1000, 2000, 4000, 8000):
+        assert wear.rber(4, 2 * n) > wear.rber(4, n)
+
+
+def test_endurance_ratio_paper_10x():
+    # Fig 2(d): 2-state cell endures ~10x a TLC (8-state)
+    assert wear.endurance_ratio(2, 8) == pytest.approx(10.0, rel=0.05)
+
+
+def test_page_capacity_fig2d():
+    # 4 KB (m=8) -> ~1.3 KB (m=2), monotone along the ladder
+    assert wear.page_capacity_bytes(8) == pytest.approx(4096, rel=0.01)
+    assert wear.page_capacity_bytes(2) == pytest.approx(1365, rel=0.01)
+    caps = [wear.page_capacity_bytes(m) for m in wear.M_LADDER]
+    assert all(a >= b for a, b in zip(caps, caps[1:]))
+
+
+def test_read_write_iteration_model():
+    # reads: ceil(log2 m) sense iterations, same as MLC/TLC/QLC
+    assert wear.read_iterations(8) == 3
+    assert wear.read_iterations(3) == 2
+    assert wear.read_iterations(2) == 1
+    # ISPP: fewer pulses for smaller m -> less wear
+    assert wear.program_pulses(2) < wear.program_pulses(8)
+    assert wear.page_program_us(2) < wear.page_program_us(8)
+
+
+def test_graceful_degradation_extends_lifetime():
+    frac = policy.simulate_lifetime(
+        wear.RecycledChip(48, seed=3), policy.DegradationPolicy()
+    )
+    base = policy.simulate_lifetime(wear.RecycledChip(48, seed=3), None)
+    life = lambda tr: max((t for t, c, _ in tr if c > 0), default=0)
+    assert life(frac) >= 4 * life(base)
+
+
+def test_degradation_steps_down_ladder():
+    blk = wear.FlashBlock(0, pe_cycles=0.0, m=8)
+    pol = policy.DegradationPolicy()
+    seen = [8]
+    for _ in range(100000):
+        blk.program_erase(100)
+        if pol.maybe_degrade(blk):
+            seen.append(blk.m)
+        if blk.retired:
+            break
+    assert seen == list(wear.M_LADDER)
+
+
+def test_recycled_chip_prewear_heterogeneous():
+    chip = wear.RecycledChip(128, seed=0)
+    pe = np.asarray([b.pe_cycles for b in chip.blocks])
+    assert pe.std() > 0 and (pe >= 0).all()
+    worn = chip.least_worn(5)
+    assert all(worn[i].pe_cycles <= worn[i + 1].pe_cycles for i in range(4))

@@ -1,0 +1,49 @@
+"""FRAC pack/unpack Pallas kernel vs the jnp codec oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.frac import codec
+from repro.kernels.frac_pack import ops as fops
+from repro.kernels.frac_pack.frac_pack import pack32, unpack32
+
+
+@pytest.mark.parametrize("k", [2, 4, 8, 16])
+@pytest.mark.parametrize("n_words", [64, 1024, 4096])
+def test_pack32_matches_codec(k, n_words):
+    n = n_words * (32 // k)
+    rng = np.random.default_rng(k * n_words)
+    codes = jnp.asarray(rng.integers(0, 1 << k, n), jnp.uint32)
+    got = pack32(codes, k)
+    want = codec.pack_bits(codes, k)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    back = unpack32(got, k, n)
+    assert (np.asarray(back) == np.asarray(codes)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.sampled_from([4, 8]),
+    rows=st.integers(1, 40),
+    cols=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_tensor_path_matches_codec(k, rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(rows, cols)), jnp.float32)
+    blob_k = fops.encode_tensor(x, kbits=k)
+    blob_r = codec.frac_encode_tensor(x, kbits=k)
+    wr = np.asarray(blob_r["words"])
+    assert (np.asarray(blob_k["words"])[: len(wr)] == wr).all()
+    xk = np.asarray(fops.decode_tensor(blob_k))
+    xr = np.asarray(codec.frac_decode_tensor(blob_r))
+    assert np.allclose(xk, xr, atol=1e-5)
+
+
+def test_dtype_sweep():
+    for dt in (jnp.float32, jnp.bfloat16):
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(64,)), dt)
+        blob = fops.encode_tensor(x, kbits=8)
+        back = fops.decode_tensor(blob)
+        assert back.dtype == dt and back.shape == x.shape

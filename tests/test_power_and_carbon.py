@@ -1,0 +1,56 @@
+"""Scheduler / nonvolatile-progress / carbon-pareto behaviour (Fig 5)."""
+import numpy as np
+import pytest
+
+from repro.core.carbon import explorer
+from repro.core.power import nonvolatile, traces
+from repro.core.power.scheduler import Action, CarbonAwareScheduler, SchedulerConfig
+
+
+def test_trace_shapes_and_determinism():
+    t1 = traces.make_trace(days=2, seed=7)
+    t2 = traces.make_trace(days=2, seed=7)
+    assert np.allclose(t1.solar, t2.solar)
+    assert len(t1) == 2 * traces.STEPS_PER_DAY
+    assert (t1.solar >= 0).all() and (t1.wind >= 0).all()
+    # solar has a diurnal cycle: nighttime zeros
+    assert (t1.solar[:40] == 0).any()
+
+
+def test_scheduler_monotone_in_supply():
+    sch = CarbonAwareScheduler(SchedulerConfig(use_forecast=False))
+    scales = [sch.decide(s).step_scale for s in np.linspace(0, 1, 21)]
+    assert all(a <= b + 1e-9 for a, b in zip(scales, scales[1:]))
+    assert sch.decide(0.1).action == Action.PAUSE
+    assert sch.decide(0.5).action == Action.DERATE
+    assert sch.decide(0.9).action == Action.RUN
+
+
+def test_scheduler_forecast_conservative():
+    sch = CarbonAwareScheduler(SchedulerConfig())
+    # current supply fine, forecast dip -> act on the dip
+    assert sch.decide(0.9, forecast_frac=0.1).action == Action.PAUSE
+
+
+def test_forward_progress_ordering_fig5r():
+    """Fig 5 right: fully-nonvolatile > partial-NV > volatile."""
+    tr = traces.make_trace(days=7, seed=0)
+    sup = traces.datacenter_supply(tr) / 30.0
+    res = {m: nonvolatile.simulate_progress(sup, mode=m)
+           for m in ("volatile", "nv-partial", "verdant")}
+    assert res["verdant"]["final_steps"] > res["nv-partial"]["final_steps"]
+    assert res["nv-partial"]["final_steps"] > res["volatile"]["final_steps"]
+    assert res["volatile"]["rollover_steps"] > 0
+    assert res["verdant"]["rollover_steps"] == 0
+
+
+def test_carbon_pareto_amoeba_best_fig5l():
+    tr = traces.make_trace(days=7, seed=0)
+    sup = traces.datacenter_supply(tr) / 30.0
+    rows = explorer.pareto(sup)
+    best = min(rows, key=lambda r: r["carbon_per_progress"])
+    assert best["name"] == "Amoeba"
+    # reconfigurability cuts embodied vs per-workload ASIC fleets
+    asic = next(r for r in rows if "CMOS" in r["name"])
+    amoeba = next(r for r in rows if r["name"] == "Amoeba")
+    assert amoeba["embodied_kg"] < asic["embodied_kg"]

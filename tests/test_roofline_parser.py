@@ -1,0 +1,143 @@
+"""HloCost parser: trip-count-aware flops/bytes/collectives.
+
+Validated against the exact cases where XLA's own cost_analysis is
+known-wrong on scans (it counts while bodies once — measured in
+DESIGN/EXPERIMENTS)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from repro.launch.roofline import HloCost, Roofline, parse_collectives
+
+
+def _hlo(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+A = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+W8 = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+MM = 2 * 256 ** 3
+
+
+def test_plain_matmul_flops():
+    hc = HloCost(_hlo(lambda a, b: a @ b, A, A))
+    assert hc.flops() == pytest.approx(MM, rel=0.02)
+
+
+def test_scan_multiplies_by_trip_count():
+    def f(a, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        out, _ = lax.scan(body, a, ws)
+        return out
+
+    hc = HloCost(_hlo(f, A, W8))
+    assert hc.flops() == pytest.approx(8 * MM, rel=0.05)
+
+
+def test_grad_flops():
+    def f(a, b):
+        return jnp.sum(jnp.tanh(a @ b))
+
+    g = jax.grad(f, argnums=(0, 1))
+    hc = HloCost(_hlo(g, A, A))
+    # fwd + 2 bwd matmuls
+    assert hc.flops() == pytest.approx(3 * MM, rel=0.05)
+
+
+def test_remat_scan_grad_flops():
+    def f(a, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+        out, _ = lax.scan(body, a, ws)
+        return jnp.sum(out)
+
+    hc = HloCost(_hlo(jax.grad(f), A, W8))
+    # XLA folds the forward into the remat recompute (the sum's cotangent
+    # needs no fwd value; value_and_grad CSEs identically — measured),
+    # leaving recompute(8) + bwd(16) = 24 matmuls.
+    assert hc.flops() == pytest.approx(24 * MM, rel=0.05)
+    hc2 = HloCost(_hlo(jax.value_and_grad(f), A, W8))
+    assert hc2.flops() == pytest.approx(24 * MM, rel=0.05)
+
+
+def test_nested_scan_trips_compose():
+    def f(a, ws):
+        def outer(c, w):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ w), None
+            c, _ = lax.scan(inner, c, jnp.arange(4))
+            return c, None
+        out, _ = lax.scan(outer, a, ws)
+        return out
+
+    hc = HloCost(_hlo(f, A, W8))
+    assert hc.flops() == pytest.approx(32 * MM, rel=0.05)
+
+
+def test_hbm_bytes_slice_aware():
+    """A scan body dynamic-slicing stacked weights must charge slice
+    bytes per iteration, not the full stack."""
+    def f(a, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        out, _ = lax.scan(body, a, ws)
+        return out
+
+    hc = HloCost(_hlo(f, A, W8))
+    # ~8 iterations × ~2 MB (dot reads/writes + tanh fusion + slice) ≈
+    # 17 MB; charging the full 2 MB stack per iteration would add
+    # +16.8 MB on top (≈33 MB total) — assert we're on the slice-aware
+    # side of that line
+    assert 4e6 < hc.hbm_bytes() < 25e6, hc.hbm_bytes()
+
+
+def test_collectives_parse_and_trip_count(subproc):
+    out = subproc("""
+import jax, jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.launch.roofline import HloCost
+mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+def f(x, ws):
+    def body(c, w):
+        y = c @ w
+        return y, None
+    out, _ = lax.scan(body, x, ws)
+    return out.sum()
+x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+ws = jax.ShapeDtypeStruct((4, 256, 256), jnp.float32)
+with jax.set_mesh(mesh):
+    c = jax.jit(f, in_shardings=(NamedSharding(mesh, P(None, "data")),
+                                 NamedSharding(mesh, P(None, None, "data")))).lower(x, ws).compile()
+hc = HloCost(c.as_text())
+coll = hc.collectives()
+total = sum(coll.values())
+assert total > 0, "expected collectives in sharded scan"
+print("COLL", sorted(coll))
+""")
+    assert "COLL" in out
+
+
+def test_roofline_record_math():
+    rl = Roofline(flops=197e12, hbm_bytes=819e9, collective_bytes=25e9,
+                  model_flops=197e12 * 256, chips=256)
+    assert rl.t_compute == pytest.approx(1.0)
+    assert rl.t_memory == pytest.approx(1.0)
+    assert rl.t_collective == pytest.approx(0.5)
+    assert rl.dominant in ("compute", "memory")
+    assert rl.useful_compute_ratio == pytest.approx(1.0)
+    assert rl.roofline_fraction == pytest.approx(1.0)
+
+
+def test_flat_parser_lower_bound():
+    def f(a, b):
+        return a @ b
+
+    txt = _hlo(f, A, A)
+    stats = parse_collectives(txt)
+    assert stats.total_bytes == 0      # no mesh, no collectives

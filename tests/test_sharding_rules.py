@@ -1,0 +1,97 @@
+"""Sharding rule unit tests (no devices needed — pure spec logic)."""
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import resolve_layout
+
+
+class FakeMesh:
+    """Duck-typed mesh: rules only read .shape (a dict)."""
+    def __init__(self, **axes):
+        self.shape = axes
+
+
+from repro.sharding.rules import batch_axes, cache_spec, spec_for_dims  # noqa: E402
+
+MESH = FakeMesh(data=16, model=16)
+MESH3 = FakeMesh(pod=2, data=16, model=16)
+
+
+def test_attention_weights_tp_and_fsdp():
+    # wq (D, H, hd) with H=32: heads on model, embed on data
+    assert spec_for_dims((4096, 32, 128), ("embed", "heads", "head_dim"), MESH) \
+        == P("data", "model", None)
+
+
+def test_gqa_kv_fallback_replicates():
+    # kv=8 doesn't divide 16: no model axis, FSDP on embed
+    assert spec_for_dims((4096, 8, 128), ("embed", "kv_heads", "head_dim"), MESH) \
+        == P("data", None, None)
+
+
+def test_expert_priority_over_mlp():
+    # llama4 experts (128) win the model axis; FSDP goes to the largest
+    # remaining divisible dim
+    assert spec_for_dims((128, 5120, 8192), ("experts", "embed", "mlp"), MESH) \
+        == P("model", None, "data")
+
+
+def test_mixtral_experts_dont_divide():
+    # 8 experts < 16: model falls through to mlp dim
+    assert spec_for_dims((8, 4096, 14336), ("experts", "embed", "mlp"), MESH) \
+        == P(None, "data", "model")
+
+
+def test_sp_layout_disables_tp_except_experts():
+    assert spec_for_dims((4096, 32, 128), ("embed", "heads", "head_dim"),
+                         MESH, layout="sp") == P("data", None, None)
+    assert spec_for_dims((128, 5120, 8192), ("experts", "embed", "mlp"),
+                         MESH, layout="sp") == P("model", None, "data")
+
+
+def test_batch_axes_divisibility():
+    assert batch_axes(MESH3, 256) == ("pod", "data")
+    assert batch_axes(MESH3, 32) == ("pod", "data")
+    assert batch_axes(MESH3, 16) == ("pod",)   # 16 % 32 != 0 but 16 % 2 == 0
+    assert batch_axes(MESH3, 1) == ()
+    assert batch_axes(MESH, 128) == ("data",)
+
+
+def test_cache_spec_kv_heads_divisible():
+    # whisper: 16 kv heads on 16-way model axis
+    spec = cache_spec((128, 32768, 16, 64),
+                      ("batch", "kv_seq", "kv_heads", "head_dim"), MESH, 128)
+    assert spec == P("data", None, "model", None)
+
+
+def test_cache_spec_seq_sharded_when_kv_small():
+    # GQA kv=8: cache sequence takes the model axis instead
+    spec = cache_spec((128, 32768, 8, 128),
+                      ("batch", "kv_seq", "kv_heads", "head_dim"), MESH, 128)
+    assert spec == P("data", "model", None, None)
+
+
+def test_cache_spec_long_context_batch1():
+    # jamba long_500k: batch=1 -> cache seq takes data AND model (256-way)
+    spec = cache_spec((1, 524288, 8, 128),
+                      ("batch", "kv_seq", "kv_heads", "head_dim"), MESH, 1)
+    assert spec == P(None, ("data", "model"), None, None)
+
+
+def test_layout_resolution():
+    assert resolve_layout(get_config("llama3.2-3b"), 16) == "sp"     # 24 heads
+    assert resolve_layout(get_config("llama4-maverick-400b-a17b"), 16) == "sp"
+    assert resolve_layout(get_config("mixtral-8x7b"), 16) == "tp"    # 32 heads
+    assert resolve_layout(get_config("rwkv6-1.6b"), 16) == "tp"
+    assert resolve_layout(get_config("llama3.2-3b"), 8) == "tp"      # 24 % 8 == 0
+
+
+def test_shard_hint_noop_without_mesh():
+    import jax.numpy as jnp
+    from repro.sharding.rules import shard_hint
+
+    x = jnp.ones((4, 8))
+    y = shard_hint(x, "batch", "none")
+    assert (np.asarray(y) == 1).all()
