@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -51,23 +52,67 @@ def bench_lifetime_gain() -> list[tuple]:
              f"x_over_fixed_tlc frac={life(frac):.0f} base={life(base):.0f}")]
 
 
+def _time(fn, *args, repeats: int = 5):
+    """Median seconds per call; fn must return something block-able."""
+    out = fn(*args)
+    jax.tree.map(lambda a: a.block_until_ready(),
+                 [a for a in jax.tree.leaves(out)
+                  if hasattr(a, "block_until_ready")])
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.tree.map(lambda a: a.block_until_ready(),
+                     [a for a in jax.tree.leaves(out)
+                      if hasattr(a, "block_until_ready")])
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
 def bench_codec_throughput() -> list[tuple]:
+    """Fused quantize→pack pipeline vs the seed two-pass implementation.
+
+    The seed encode was quantize_blocks → pack_bits with scatter-adds
+    (three passes over the tensor, serialized scatters); the fused path
+    is one pass per tile (Pallas on TPU, single XLA fusion on CPU).
+    """
+    from functools import partial
+
     from repro.kernels.frac_pack import ops as fops
 
-    x = jnp.asarray(np.random.default_rng(0).normal(size=(1 << 20,)),
-                    jnp.float32)
-    blob = fops.encode_tensor(x, kbits=8)          # warmup/compile
-    jnp.asarray(blob["words"]).block_until_ready()
-    t0 = time.perf_counter()
-    n = 3
-    for _ in range(n):
-        blob = fops.encode_tensor(x, kbits=8)
-        jnp.asarray(blob["words"]).block_until_ready()
-    dt = (time.perf_counter() - t0) / n
-    ratio = x.size * 4 / codec.compressed_bytes(
-        {k: blob[k] for k in ("words", "scales")} | {"meta": blob["meta"]})
-    return [("frac_pack_1M_f32", dt * 1e6,
-             f"us_per_call ratio={ratio:.2f}x (interpret-mode CPU)")]
+    N = 1 << 20
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(N,)), jnp.float32)
+    backend = jax.default_backend()
+    rows = []
+
+    @partial(jax.jit, static_argnames=("kbits",))
+    def seed_encode(flat, kbits):            # the seed two-pass path
+        codes, scales = codec.quantize_blocks(flat, kbits)
+        return codec.pack_bits_scatter(codes, kbits), scales
+
+    @partial(jax.jit, static_argnames=("kbits", "n"))
+    def seed_decode(words, scales, kbits, n):
+        codes = codec.unpack_bits_gather(words, kbits, n)
+        return codec.dequantize_blocks(codes, scales, kbits, n)
+
+    for k in (4, 8):
+        dt_seed = _time(lambda: seed_encode(x, k))
+        dt_fused = _time(lambda: fops.encode_tensor(x, kbits=k))
+        blob = fops.encode_tensor(x, kbits=k)
+        ratio = x.size * 4 / codec.compressed_bytes(blob)
+        rows.append((f"frac_encode_seed_1M_k{k}", dt_seed * 1e6,
+                     f"us_per_call (two-pass scatter, {backend})"))
+        rows.append((f"frac_encode_fused_1M_k{k}", dt_fused * 1e6,
+                     f"us_per_call ratio={ratio:.2f}x ({backend})"))
+        rows.append((f"frac_encode_speedup_k{k}", dt_seed / dt_fused,
+                     "x_fused_over_seed"))
+        n_cells = -(-N // codec.BLOCK) * codec.BLOCK
+        dt_dseed = _time(lambda: seed_decode(blob["words"], blob["scales"],
+                                             k, n_cells))
+        dt_dfused = _time(lambda: fops.decode_tensor(blob))
+        rows.append((f"frac_decode_speedup_k{k}", dt_dseed / dt_dfused,
+                     "x_fused_over_seed"))
+    return rows
 
 
 def run() -> list[tuple]:

@@ -8,14 +8,33 @@ Prints ``name,value,derived`` CSV rows.  Mapping to the paper:
   bench_kernels          §II-A NTT / SHA3 workloads
   bench_roofline         EXPERIMENTS §Roofline table (from the dry-run)
   bench_ese_estimates    Fig 4(a) estimator pipeline end-to-end
+
+Usage:
+  python benchmarks/run.py [--sections frac,kernels] [--json [DIR]]
+
+``--sections`` runs a comma-separated subset (CI smoke checks run just
+``frac,kernels``).  ``--json`` additionally writes one
+``BENCH_<section>.json`` per section — rows plus wall seconds — so the
+perf trajectory is machine-readable across commits.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import time
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sections", default=None,
+                    help="comma-separated subset of sections to run")
+    ap.add_argument("--json", nargs="?", const=".", default=None,
+                    metavar="DIR",
+                    help="write BENCH_<section>.json files into DIR")
+    args = ap.parse_args(argv)
+
     from benchmarks import (
         bench_ese_estimates,
         bench_ese_wind,
@@ -33,21 +52,44 @@ def main() -> None:
         ("roofline", bench_roofline),
         ("ese_estimates", bench_ese_estimates),
     ]
+    if args.sections:
+        wanted = {s.strip() for s in args.sections.split(",") if s.strip()}
+        unknown = wanted - {n for n, _ in modules}
+        if unknown:
+            sys.exit(f"unknown sections: {sorted(unknown)} "
+                     f"(have {[n for n, _ in modules]})")
+        modules = [(n, m) for n, m in modules if n in wanted]
+
     print("name,value,derived")
     failures = 0
     for name, mod in modules:
         t0 = time.time()
+        rows: list[dict] = []
+        error: str | None = None
         try:
             for row in mod.run():
                 n, v, d = row
                 print(f"{n},{v:.6g},{d}")
+                rows.append({"name": n, "value": float(v), "derived": d})
         except Exception as e:  # keep the harness running
             failures += 1
-            print(f"{name}_FAILED,0,{type(e).__name__}: {e}")
-        print(f"_section_{name}_seconds,{time.time()-t0:.1f},wall", flush=True)
+            error = f"{type(e).__name__}: {e}"
+            print(f"{name}_FAILED,0,{error}")
+        wall = time.time() - t0
+        print(f"_section_{name}_seconds,{wall:.1f},wall", flush=True)
+        if args.json is not None:
+            os.makedirs(args.json, exist_ok=True)
+            out = {"section": name, "rows": rows, "seconds": round(wall, 3)}
+            if error is not None:
+                out["error"] = error
+            path = os.path.join(args.json, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump(out, f, indent=1)
     if failures:
         sys.exit(1)
 
 
 if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     main()

@@ -1,0 +1,92 @@
+"""Backports of newer-JAX public APIs for older jax runtimes (0.4.x).
+
+The codebase targets the current jax API surface (``jax.set_mesh``,
+``jax.shard_map``, ``jax.sharding.AxisType``/``get_abstract_mesh``,
+``jax.make_mesh(axis_types=...)``).  Some deployment containers pin an
+older jax where those names don't exist yet but the underlying
+machinery does (mesh context managers, ``jax.experimental.shard_map``).
+This module installs thin adapters onto ``jax`` for exactly the missing
+names — on a current jax it is a no-op.  It is imported from
+``repro/__init__.py`` so every entry point (tests, benchmarks, launch
+scripts, subprocess snippets) sees one consistent API.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding
+
+
+def _install() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    _orig_make_mesh = getattr(jax, "make_mesh", None)
+    if _orig_make_mesh is None:
+        import numpy as _np
+
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None,
+                      devices=None):
+            devices = devices if devices is not None else jax.devices()
+            n = int(_np.prod(axis_shapes))
+            return jax.sharding.Mesh(
+                _np.asarray(devices[:n]).reshape(axis_shapes), axis_names)
+
+        jax.make_mesh = make_mesh
+    else:
+        try:
+            _mm_params = inspect.signature(_orig_make_mesh).parameters
+        except (TypeError, ValueError):
+            _mm_params = {"axis_types": None}
+        if "axis_types" not in _mm_params:
+            @functools.wraps(_orig_make_mesh)
+            def make_mesh(axis_shapes, axis_names, *, axis_types=None,
+                          devices=None):
+                return _orig_make_mesh(axis_shapes, axis_names,
+                                       devices=devices)
+
+            jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "set_mesh"):
+        @contextlib.contextmanager
+        def set_mesh(mesh):
+            # Mesh is a context manager on old jax: entering it sets the
+            # ambient resource env, which the get_abstract_mesh backport
+            # below and bare-PartitionSpec sharding constraints read.
+            with mesh:
+                yield mesh
+
+        jax.set_mesh = set_mesh
+
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        from jax._src import mesh as _mesh_lib
+
+        def get_abstract_mesh():
+            m = _mesh_lib.thread_resources.env.physical_mesh
+            return None if m.empty else m
+
+        jax.sharding.get_abstract_mesh = get_abstract_mesh
+
+    if hasattr(jax, "tree") and not hasattr(jax.tree, "flatten_with_path"):
+        jax.tree.flatten_with_path = jax.tree_util.tree_flatten_with_path
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma)
+
+        jax.shard_map = shard_map
+
+
+_install()

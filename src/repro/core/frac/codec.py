@@ -27,6 +27,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # ---------------------------------------------------------------------------
 # Code parameters (Fig 2(c))
@@ -78,8 +79,13 @@ def utilization_table(ms=(2, 3, 4, 5, 6, 7, 8), max_alpha: int = 10):
 # ---------------------------------------------------------------------------
 
 
-def pack_bits(values: jax.Array, bits: int) -> jax.Array:
-    """values: (N,) uint32, each < 2^bits -> packed (ceil(N·bits/32),) uint32."""
+def pack_bits_scatter(values: jax.Array, bits: int) -> jax.Array:
+    """General (any bit width) pack via scatter-add.  Codewords may
+    straddle word boundaries, so each value contributes a lo part and a
+    hi spill; the ``.at[].add`` scatters serialize badly on accelerators,
+    which is why the word-aligned widths take the vectorized path in
+    ``pack_bits``.  Kept as the fractional-bit path and as the seed
+    baseline for the codec-throughput benchmark."""
     n = values.shape[0]
     n_words = -(-(n * bits) // 32)
     values = values.astype(jnp.uint32)
@@ -95,8 +101,8 @@ def pack_bits(values: jax.Array, bits: int) -> jax.Array:
     return packed[:n_words]
 
 
-def unpack_bits(packed: jax.Array, bits: int, n: int) -> jax.Array:
-    """Inverse of pack_bits -> (n,) uint32."""
+def unpack_bits_gather(packed: jax.Array, bits: int, n: int) -> jax.Array:
+    """General inverse of pack_bits_scatter -> (n,) uint32."""
     start = jnp.arange(n, dtype=jnp.uint32) * bits
     word = start // 32
     off = start % 32
@@ -105,6 +111,36 @@ def unpack_bits(packed: jax.Array, bits: int, n: int) -> jax.Array:
     hi = jnp.where(off > 0, pad[word + 1] << ((32 - off) % 32), 0)
     mask = jnp.uint32((1 << bits) - 1)
     return (lo | hi) & mask
+
+
+def pack_bits(values: jax.Array, bits: int) -> jax.Array:
+    """values: (N,) uint32, each < 2^bits -> packed (ceil(N·bits/32),) uint32.
+
+    Word-aligned widths (32 % bits == 0: the quantizer's k ∈ {2,4,8,16})
+    take a scatter-free reshape + shift-OR path: 32/bits codes land in
+    one word, so a single sum over disjoint bit ranges builds the word.
+    Fractional widths (11-bits-in-7-cells codewords) fall back to the
+    scatter path; both produce identical words."""
+    if 32 % bits == 0:
+        c = 32 // bits
+        n = values.shape[0]
+        n_words = -(-n // c)
+        v = _pad_to(values.astype(jnp.uint32), c).reshape(n_words, c)
+        shifts = jnp.arange(c, dtype=jnp.uint32) * bits
+        # disjoint bit ranges: sum == or, and sum reduces on the VPU
+        return (v << shifts[None, :]).sum(axis=1, dtype=jnp.uint32)
+    return pack_bits_scatter(values, bits)
+
+
+def unpack_bits(packed: jax.Array, bits: int, n: int) -> jax.Array:
+    """Inverse of pack_bits -> (n,) uint32."""
+    if 32 % bits == 0:
+        c = 32 // bits
+        shifts = jnp.arange(c, dtype=jnp.uint32) * bits
+        mask = jnp.uint32((1 << bits) - 1)
+        vals = (packed[:, None] >> shifts[None, :]) & mask
+        return vals.reshape(-1)[:n]
+    return unpack_bits_gather(packed, bits, n)
 
 
 # ---------------------------------------------------------------------------
@@ -162,7 +198,17 @@ def quantize_blocks(
     scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) + 1e-12
     t = (xb / scale + 1.0) * 0.5 * q                # [0, q]
     if rng is not None:
-        t = jnp.floor(t + jax.random.uniform(rng, t.shape))
+        # stochastic rounding as floor(t) + (frac(t) + u >= 1).  The
+        # naive floor(t + u) is NOT bit-stable across eager/jit/Pallas:
+        # XLA contracts the +u into the preceding multiply (FMA) and the
+        # extra precision flips codes.  Here t - floor(t) is exact and
+        # the comparison is exact, so every backend agrees.  The barrier
+        # keeps the subtraction from being FMA-contracted with t's own
+        # producer chain.
+        t = jax.lax.optimization_barrier(t)
+        tf = jnp.floor(t)
+        bump = (t - tf) + jax.random.uniform(rng, t.shape) >= 1.0
+        t = tf + bump.astype(jnp.float32)
     else:
         t = jnp.round(t)
     codes = jnp.clip(t, 0, q).astype(jnp.uint32)
@@ -175,7 +221,14 @@ def dequantize_blocks(
     q = (1 << kbits) - 1
     n_blocks = scales.shape[0]
     cb = codes[: n_blocks * BLOCK].astype(jnp.float32).reshape(-1, BLOCK)
-    x = (cb / q * 2.0 - 1.0) * scales[:, None]
+    # (2c - q)·scale·(1/q) == (c/q·2 - 1)·scale, restructured so every
+    # step is bit-deterministic under compilation: 2c - q is an exact
+    # fp32 integer, 1/q is a trace-time fp32 constant (XLA strength-
+    # reduces division by constants, which would differ from eager), and
+    # plain multiplies are never reassociated.  Eager, jit and the
+    # Pallas kernel therefore all produce identical bits.
+    inv_q = float(np.float32(1.0) / np.float32(q))
+    x = (cb * 2.0 - q) * (scales[:, None] * inv_q)
     return x.reshape(-1)[:n]
 
 

@@ -9,6 +9,12 @@ jnp codec (core/frac/codec.py), which is also this kernel's oracle.
 
 Memory-bound by design: the roofline win is that checkpoint bytes drop
 k/32-fold before they ever leave HBM.
+
+This module packs ALREADY-QUANTIZED codes; the fused quantize→pack
+pipeline (absmax scale + quantize + pack in one VMEM pass) lives in
+``frac_quant_pack.py``, and consumers should go through the
+``ops.encode_tensor``/``decode_tensor`` dispatch rather than calling
+either kernel directly.
 """
 from __future__ import annotations
 

@@ -1,46 +1,246 @@
-"""jit'd wrappers: fused quantize→pack / unpack→dequantize tensor paths.
+"""Single dispatch point for the fused FRAC quantize→pack pipeline.
 
-These are the checkpoint-manager and grad-compression entry points; the
-pure-jnp codec (core/frac/codec.py) is the oracle and the fallback for
-fractional (non-word-aligned) bit widths.
+Every consumer of FRAC tensor encoding — the checkpoint manager
+(``train/checkpoint.py``), gradient compression (``train/grad_compress``,
+both ``ef_compress`` numerics and the ``compressed_allreduce_mean`` wire
+payload), the frac8 optimizer state (``train/optimizer.py``) and the
+serving engine's FRAC KV-cache option (``serve/engine.py``) — goes
+through this module, so backend selection lives in exactly one place:
+
+  mode="pallas"  fused Pallas kernel (frac_quant_pack.py), compiled
+                 (interpret=False) on TPU — one HBM pass, packed output.
+  mode="pallas_interpret"
+                 same kernel through the Pallas interpreter (tests/CPU
+                 debugging; slow but bit-exact).
+  mode="jnp"     single-jit fused jnp path: quantize_blocks + the
+                 scatter-free shift-OR pack from core/frac/codec.py.
+                 XLA fuses the two, so this is also one pass — the fast
+                 fallback wherever Mosaic isn't available.
+  mode=None      auto: "pallas" on TPU for word-aligned k, else "jnp".
+                 Fractional bit widths (32 % k != 0) always use "jnp",
+                 which internally falls back to the scatter codec.
+
+All modes produce bit-identical blobs ({"words", "scales", "meta"},
+same schema as ``codec.frac_encode_tensor``), with the pure-jnp codec
+as the property-tested oracle.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.frac import codec
-from repro.kernels.frac_pack.frac_pack import pack32, unpack32
+from repro.kernels.frac_pack import frac_quant_pack
+
+Blob = dict[str, Any]
 
 
-def encode_tensor(x: jax.Array, kbits: int = 8, interpret: bool = True):
-    """Quantize (256-blocks, absmax) + Pallas-pack.  Matches
-    codec.frac_encode_tensor bit-for-bit for k | 32."""
+def default_mode(kbits: int) -> str:
+    """Auto backend selection.  ``REPRO_FRAC_MODE`` (pallas | jnp |
+    pallas_interpret) overrides for all consumers — none of them expose
+    the mode parameter, so this is the operational escape hatch.  A
+    'pallas' choice is still subject to the per-k kernel probe in
+    ``_resolve_mode``."""
+    import os
+
+    forced = os.environ.get("REPRO_FRAC_MODE")
+    if forced:
+        if forced not in ("pallas", "pallas_interpret", "jnp"):
+            raise ValueError(
+                f"REPRO_FRAC_MODE={forced!r}: expected one of "
+                "pallas | pallas_interpret | jnp")
+        if forced.startswith("pallas") \
+                and kbits not in frac_quant_pack.SUPPORTED_K:
+            # the env var is a global preference: fractional widths
+            # still route to jnp
+            return "jnp"
+        return forced
+    if kbits in frac_quant_pack.SUPPORTED_K \
+            and jax.default_backend() == "tpu":
+        return "pallas"
+    return "jnp"
+
+
+_pallas_ok_cache: dict[int, bool] = {}
+
+
+def _pallas_ok(k: int) -> bool:
+    """Validate the compiled kernel once per bit-width with a tiny
+    concrete probe.  The probe compiles eagerly, so a Mosaic lowering
+    failure is caught HERE — a try/except around the real call could
+    not see it when the caller is itself inside an outer jax.jit (the
+    frac8 optimizer path), where tracing succeeds and the compile error
+    only surfaces at the outer compile.  Real calls then run unguarded,
+    so genuine input errors surface instead of being mislabeled as
+    kernel failures.  The verdict is per-k (Mosaic lowering depends on
+    the lane width 32/k): a failure for one width never disables a
+    width whose probe passed."""
+    if k not in _pallas_ok_cache:
+        try:
+            probe = jnp.zeros((codec.BLOCK,), jnp.float32)
+            w, s = frac_quant_pack.quant_pack(probe, k, interpret=False)
+            frac_quant_pack.unpack_dequant(w, s, k, codec.BLOCK,
+                                           interpret=False)
+            jax.block_until_ready(w)
+            _pallas_ok_cache[k] = True
+        except Exception as e:
+            import warnings
+
+            warnings.warn(
+                f"frac_quant_pack Pallas kernel probe failed for k={k} "
+                f"({type(e).__name__}: {e}); using the fused jnp path "
+                f"for k={k} this process. Set REPRO_FRAC_MODE=jnp to "
+                "silence.", RuntimeWarning)
+            _pallas_ok_cache[k] = False
+    return _pallas_ok_cache[k]
+
+
+def _resolve_mode(kbits: int, mode: str | None) -> str:
+    """Shared encode/decode mode resolution.  An explicitly passed
+    pallas mode fails loudly — on a non-word-aligned k or a failing
+    kernel probe — never silently switching backend; only the auto /
+    env-var 'pallas' preference falls back to jnp on probe failure."""
+    explicit = mode is not None
+    if explicit and mode.startswith("pallas") \
+            and kbits not in frac_quant_pack.SUPPORTED_K:
+        raise ValueError(
+            f"mode={mode!r} requires k in {frac_quant_pack.SUPPORTED_K}, "
+            f"got k={kbits} (fractional widths use mode='jnp')")
+    mode = mode or default_mode(kbits)
+    if mode == "pallas" and not _pallas_ok(kbits):
+        if explicit:
+            raise RuntimeError(
+                f"mode='pallas' requested but the compiled kernel probe "
+                f"failed for k={kbits} (see RuntimeWarning)")
+        return "jnp"
+    return mode
+
+
+# ---------------------------------------------------------------------------
+# fused jnp path (one jit: XLA fuses quantize + shift-OR pack)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("kbits",))
+def _encode_jnp(flat, kbits: int):
+    codes, scales = codec.quantize_blocks(flat, kbits)
+    return codec.pack_bits(codes, kbits), scales
+
+
+@partial(jax.jit, static_argnames=("kbits",))
+def _encode_jnp_rng(flat, rng, kbits: int):
+    codes, scales = codec.quantize_blocks(flat, kbits, rng=rng)
+    return codec.pack_bits(codes, kbits), scales
+
+
+@partial(jax.jit, static_argnames=("kbits", "n"))
+def _decode_jnp(words, scales, kbits: int, n: int):
+    n_cells = -(-n // codec.BLOCK) * codec.BLOCK
+    codes = codec.unpack_bits(words, kbits, n_cells)
+    return codec.dequantize_blocks(codes, scales, kbits, n)
+
+
+# ---------------------------------------------------------------------------
+# tensor blobs
+# ---------------------------------------------------------------------------
+
+
+def encode_tensor(x: jax.Array, kbits: int = 8, *,
+                  rng: jax.Array | None = None,
+                  mode: str | None = None) -> Blob:
+    """Tensor -> FRAC blob via the fused pipeline.  Bit-identical to
+    ``codec.frac_encode_tensor`` for every mode and every k."""
+    mode = _resolve_mode(kbits, mode)
     flat = x.reshape(-1)
     n = flat.shape[0]
-    codes, scales = codec.quantize_blocks(flat, kbits)
-    c = 32 // kbits
-    pad = (-codes.shape[0]) % c
-    if pad:
-        codes = jnp.pad(codes, (0, pad))
+    if mode.startswith("pallas"):
+        words, scales = frac_quant_pack.quant_pack(
+            flat, kbits, rng=rng, interpret=(mode == "pallas_interpret"))
+    else:
+        flat = flat.astype(jnp.float32)
+        if rng is None:
+            words, scales = _encode_jnp(flat, kbits)
+        else:
+            words, scales = _encode_jnp_rng(flat, rng, kbits)
     return {
-        "words": pack32(codes, kbits, interpret=interpret),
+        "words": words,
         "scales": scales,
         "meta": (tuple(x.shape), int(kbits), n, str(x.dtype)),
     }
 
 
-@partial(jax.jit, static_argnames=("meta", "interpret"))
-def _decode(words, scales, meta, interpret):
-    shape, kbits, n, dtype = meta
-    n_codes = words.shape[0] * (32 // kbits)
-    codes = unpack32(words, kbits, n_codes, interpret=interpret)
-    x = codec.dequantize_blocks(codes, scales, kbits, n)
-    return x.reshape(shape).astype(dtype)
+def decode_tensor(blob: Blob, *, mode: str | None = None) -> jax.Array:
+    """FRAC blob -> tensor (shape/dtype restored from meta)."""
+    shape, kbits, n, dtype = blob["meta"]
+    mode = _resolve_mode(kbits, mode)
+    if mode.startswith("pallas"):
+        flat = frac_quant_pack.unpack_dequant(
+            blob["words"], blob["scales"], kbits, n,
+            interpret=(mode == "pallas_interpret"))
+    else:
+        flat = _decode_jnp(blob["words"], blob["scales"], kbits, n)
+    return flat.reshape(shape).astype(dtype)
 
 
-def decode_tensor(blob, interpret: bool = True) -> jax.Array:
-    return _decode(blob["words"], blob["scales"], tuple(blob["meta"]),
-                   interpret)
+def frac_zeros_like(x: jax.Array, kbits: int = 8, *,
+                    mode: str | None = None) -> Blob:
+    return encode_tensor(jnp.zeros(x.shape, jnp.float32), kbits, mode=mode)
+
+
+def compressed_bytes(blob: Blob) -> int:
+    return codec.compressed_bytes(blob)
+
+
+# ---------------------------------------------------------------------------
+# fake-quant (quantize→dequantize, no packed bytes materialized):
+# ef_compress numerics and the emulated FRAC KV cache
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("kbits",))
+def _fake_quant_jnp(flat, kbits: int):
+    codes, scales = codec.quantize_blocks(flat, kbits)
+    return codec.dequantize_blocks(codes, scales, kbits, flat.shape[0])
+
+
+@partial(jax.jit, static_argnames=("kbits",))
+def _fake_quant_jnp_rng(flat, rng, kbits: int):
+    codes, scales = codec.quantize_blocks(flat, kbits, rng=rng)
+    return codec.dequantize_blocks(codes, scales, kbits, flat.shape[0])
+
+
+def fake_quant(x: jax.Array, kbits: int, *,
+               rng: jax.Array | None = None) -> jax.Array:
+    """x -> dequantize(quantize(x)), same shape/dtype.  Numerically
+    identical to a full encode→decode round trip (packing is lossless),
+    without materializing the packed words."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    if rng is None:
+        out = _fake_quant_jnp(flat, kbits)
+    else:
+        out = _fake_quant_jnp_rng(flat, rng, kbits)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def fake_quant_tree(tree: Any, kbits: int) -> Any:
+    """fake_quant on every floating leaf of a pytree (KV caches)."""
+    def one(leaf):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating):
+            return fake_quant(leaf, kbits)
+        return leaf
+    return jax.tree.map(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# raw code <-> word helpers (the compressed_allreduce wire payload;
+# shard_map-safe pure functions)
+# ---------------------------------------------------------------------------
+
+
+def pack_codes(codes: jax.Array, kbits: int) -> jax.Array:
+    """(N,) uint32 codes < 2^k -> packed uint32 words (scatter-free for
+    word-aligned k)."""
+    return codec.pack_bits(codes, kbits)

@@ -2,10 +2,15 @@
 
 Length-bucketed static batching: requests with equal prompt length share
 a prefill; the decode loop advances the whole batch one token per step
-against the donated cache.  FRAC-quantized KV caches (kbits dial) are a
-config option — the capacity↔fidelity trade from the paper applied to
-serving memory.  The SP-decode cache sharding (cache sequence dim over
-'model') comes from sharding/rules.py when a mesh is provided.
+against the donated cache.  FRAC-quantized KV caches
+(``kv_frac_kbits`` dial) are a config option — the capacity↔fidelity
+trade from the paper applied to serving memory: after prefill the whole
+prompt KV is pushed through the fused quantize→pack pipeline
+(kernels/frac_pack/ops.py fake-quant), so decode reads exactly the
+fidelity a k-bit FRAC cell array would return while holding k/32 of the
+fp32 bytes.  ``stats.kv_bytes_full`` / ``stats.kv_bytes_frac`` record
+the modeled capacity win.  The SP-decode cache sharding (cache sequence
+dim over 'model') comes from sharding/rules.py when a mesh is provided.
 """
 from __future__ import annotations
 
@@ -40,15 +45,19 @@ class ServeStats:
     prefills: int = 0
     decode_steps: int = 0
     ttft_s: list[float] = field(default_factory=list)
+    kv_bytes_full: int = 0          # fp bytes the caches would occupy
+    kv_bytes_frac: int = 0          # bytes after the FRAC kbits dial
 
 
 class ServeEngine:
     def __init__(self, mcfg: ModelConfig, params, *, max_batch: int = 8,
-                 eos_id: int | None = None):
+                 eos_id: int | None = None,
+                 kv_frac_kbits: int | None = None):
         self.mcfg = mcfg
         self.params = params
         self.max_batch = max_batch
         self.eos_id = eos_id
+        self.kv_frac_kbits = kv_frac_kbits
         self._queue: list[Request] = []
         self._next_rid = 0
         self.stats = ServeStats()
@@ -100,6 +109,8 @@ class ServeEngine:
         self.stats.prefills += 1
         # grow cache to S + max_new slots
         cache = self._grow_cache(cache, B, S, S + max_new)
+        if self.kv_frac_kbits is not None:
+            cache = self._frac_cache(cache)
         tok = greedy_sample(logits[:, -1])
         t_first = time.time()
         for r, t in zip(bucket, np.asarray(tok)):
@@ -127,6 +138,24 @@ class ServeEngine:
             r.t_done = now
             self.stats.tokens += len(r.output)
             self.stats.ttft_s.append(r.t_first - r.t_submit)
+
+    def _frac_cache(self, cache):
+        """Emulate a FRAC-stored KV cache: every float leaf goes through
+        the fused quantize→dequantize pipeline at ``kv_frac_kbits``, so
+        subsequent decode steps see exactly the fidelity the k-bit cell
+        array would return.  Books the modeled byte savings in stats."""
+        from repro.core.frac.codec import BLOCK
+        from repro.kernels.frac_pack import ops as fops
+
+        k = self.kv_frac_kbits
+        for leaf in jax.tree.leaves(cache):
+            if jnp.issubdtype(leaf.dtype, jnp.floating):
+                full = leaf.size * leaf.dtype.itemsize
+                self.stats.kv_bytes_full += full
+                # k bits per element + one fp32 scale per quant block
+                self.stats.kv_bytes_frac += leaf.size * k // 8 \
+                    + (-(-leaf.size // BLOCK)) * 4
+        return fops.fake_quant_tree(cache, k)
 
     def _grow_cache(self, cache, B: int, cur: int, target: int):
         """Pad prefill caches (built at prompt length) out to the decode

@@ -5,7 +5,12 @@ Layout (one directory per step, atomically renamed into place):
     <root>/step_<N>/
         manifest.json     tree structure, shapes/dtypes, per-leaf SHA3-256
                           digests, codec mode, mesh + config fingerprints
-        <leaf-path>.bin   raw | zstd | frac<k> payload (+ scales)
+        <leaf-path>.bin   raw | zstd | zlib | frac<k> payload (+ scales)
+
+Exact payloads prefer zstandard and fall back to stdlib zlib when it is
+not installed ("zlib" enc).  frac<k> payloads go through the fused
+quantize→pack pipeline (kernels/frac_pack/ops.py dispatch), so a
+snapshot write is one kernel pass per leaf instead of three jnp passes.
 
 Modes:
   exact  — raw little-endian bytes, zstd-compressed: bit-exact resume
@@ -35,9 +40,14 @@ from typing import Any
 
 import jax
 import numpy as np
-import zstandard
 
-from repro.core.frac import codec
+try:                          # optional: fall back to stdlib zlib when the
+    import zstandard          # container doesn't ship python-zstandard
+except ModuleNotFoundError:
+    zstandard = None
+import zlib
+
+from repro.kernels.frac_pack import ops as fops
 
 SEP = "::"
 
@@ -103,10 +113,15 @@ class CheckpointManager:
             payload = arr.tobytes()
             enc = "raw"
             if self.use_zstd:
-                payload = zstandard.compress(payload, 3)
-                enc = "zstd"
+                if zstandard is not None:
+                    payload = zstandard.compress(payload, 3)
+                    enc = "zstd"
+                else:
+                    payload = zlib.compress(payload, 3)
+                    enc = "zlib"
             return {"enc": enc, "payload": payload}
-        blob = codec.frac_encode_tensor(jax.numpy.asarray(arr), kbits=kbits)
+        # fused quantize→pack pipeline (kernels/frac_pack): one pass
+        blob = fops.encode_tensor(jax.numpy.asarray(arr), kbits=kbits)
         words = np.asarray(blob["words"])
         scales = np.asarray(blob["scales"])
         return {
@@ -120,9 +135,15 @@ class CheckpointManager:
         enc = entry["enc"]
         shape = tuple(entry["shape"])
         dtype = np.dtype(entry["dtype"])
-        if enc in ("raw", "zstd"):
+        if enc in ("raw", "zstd", "zlib"):
             if enc == "zstd":
+                if zstandard is None:
+                    raise ModuleNotFoundError(
+                        "checkpoint was written with zstandard, which is "
+                        "not installed; install it or re-save with zlib")
                 payload = zstandard.decompress(payload)
+            elif enc == "zlib":
+                payload = zlib.decompress(payload)
             return np.frombuffer(payload, dtype).reshape(shape).copy()
         kbits = int(enc[4:])
         n_words = entry["n_words"]
@@ -133,7 +154,7 @@ class CheckpointManager:
             "scales": jax.numpy.asarray(scales),
             "meta": (shape, kbits, int(np.prod(shape)), entry["dtype"]),
         }
-        return np.asarray(codec.frac_decode_tensor(blob))
+        return np.asarray(fops.decode_tensor(blob))
 
     # -- save ----------------------------------------------------------------
     def save(self, step: int, tree: Any, *, extra: dict | None = None,

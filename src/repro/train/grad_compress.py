@@ -12,15 +12,19 @@ Two pieces:
    the data-parallel axes whose all-reduce payload really is the packed
    uint32 words (k/32 of the fp32 bytes).  The dry-run tests assert the
    HLO's all-reduce operand shrinks accordingly.
+
+Both pieces route through the fused FRAC pipeline dispatch
+(kernels/frac_pack/ops.py): ``ef_compress`` uses its fused fake-quant,
+and the wire payload is packed/unpacked with the scatter-free shift-OR
+helpers instead of per-word scatters.
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.frac import codec
+from repro.kernels.frac_pack import ops as fops
 
 
 def ef_compress(grads, residual, kbits: int):
@@ -31,10 +35,7 @@ def ef_compress(grads, residual, kbits: int):
 
     def one(g, r):
         gf = g.astype(jnp.float32) + r
-        flat = gf.reshape(-1)
-        codes, scales = codec.quantize_blocks(flat, kbits)
-        deq = codec.dequantize_blocks(codes, scales, kbits, flat.shape[0])
-        deq = deq.reshape(g.shape)
+        deq = fops.fake_quant(gf, kbits)   # fused quant→dequant dispatch
         return deq.astype(g.dtype), gf - deq
 
     flat_g, treedef = jax.tree.flatten(grads)
@@ -75,18 +76,16 @@ def compressed_allreduce_mean(x_stacked: jax.Array, mesh, axis: str = "data",
         gscale = jax.lax.pmax(scale, axis)  # shared scale (tiny wire cost)
         t = (xb / gscale[:, None] + 1.0) * 0.5 * q
         codes = jnp.clip(jnp.round(t), 0, q).astype(jnp.uint32).reshape(-1)
-        # pack k-bit codes -> uint32 words: THIS is the wire payload
-        words = jnp.zeros((n_padded // c,), jnp.uint32)
-        wv = codes.reshape(-1, c)
-        for j in range(c):
-            words = words | (wv[:, j] << (kbits * j))
+        # pack k-bit codes -> uint32 words (scatter-free shift-OR path):
+        # THIS is the wire payload
+        words = fops.pack_codes(codes, kbits)
         gathered = jax.lax.all_gather(words, axis)      # (nsh, n/c) words
-        # local decode + mean (gather-then-reduce compressed DP)
-        acc = jnp.zeros((n_padded,), jnp.float32)
-        mask = jnp.uint32(q)
-        for j in range(c):
-            col = (gathered >> (kbits * j)) & mask      # (nsh, n/c)
-            acc = acc.at[j::c].set(col.astype(jnp.float32).sum(0)[: n_padded // c])
+        # local decode + mean (gather-then-reduce compressed DP); unpack
+        # every shard's words at once — (nsh, n/c, c) shift-AND instead
+        # of the seed's strided .at[j::c] scatter
+        shifts = jnp.arange(c, dtype=jnp.uint32) * kbits
+        cols = (gathered[:, :, None] >> shifts[None, None, :]) & jnp.uint32(q)
+        acc = cols.astype(jnp.float32).sum(0).reshape(-1)   # (n_padded,)
         mean_codes = (acc / nsh).reshape(-1, codec.BLOCK)
         out = (mean_codes / q * 2.0 - 1.0) * gscale[:, None]
         return out.reshape(-1)[:n]

@@ -35,7 +35,7 @@ class AdamWConfig:
 
 def init_opt_state(params: Pytree, ocfg: AdamWConfig) -> Pytree:
     if ocfg.state_dtype == "frac8":
-        from repro.core.frac.codec import frac_zeros_like
+        from repro.kernels.frac_pack.ops import frac_zeros_like
 
         zeros = lambda p: {
             "m": frac_zeros_like(p), "v": frac_zeros_like(p)
@@ -77,7 +77,12 @@ def apply_updates(
 
     use_frac = ocfg.state_dtype == "frac8"
     if use_frac:
-        from repro.core.frac.codec import frac_decode_tensor, frac_encode_tensor
+        # fused quantize→pack / unpack→dequantize dispatch (one kernel
+        # pass per m/v tensor instead of three jnp passes)
+        from repro.kernels.frac_pack.ops import (
+            decode_tensor as frac_decode_tensor,
+            encode_tensor as frac_encode_tensor,
+        )
 
     def upd(p, g, mv):
         g = g.astype(jnp.float32) * scale

@@ -1,0 +1,63 @@
+"""Minimal stand-in for the ``hypothesis`` API surface these tests use.
+
+The container image may not ship hypothesis; conftest.py registers this
+module under ``sys.modules["hypothesis"]`` in that case so the
+property-style tests still run.  Coverage is deliberately tiny — just
+``@given``/``@settings`` and the three strategies the suite draws from
+(``integers``, ``sampled_from``, ``binary``) — and examples are drawn
+from a per-test deterministic seed, so failures reproduce.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def draw(self, rnd: random.Random):
+        return self._draw_fn(rnd)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda r: r.choice(elements))
+
+
+def binary(min_size: int = 0, max_size: int = 100) -> _Strategy:
+    return _Strategy(
+        lambda r: bytes(r.randrange(256)
+                        for _ in range(r.randint(min_size, max_size)))
+    )
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples", 20)
+            rnd = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                drawn_args = [s.draw(rnd) for s in arg_strategies]
+                drawn_kw = {k: s.draw(rnd) for k, s in kw_strategies.items()}
+                fn(*args, *drawn_args, **kwargs, **drawn_kw)
+        # hide the drawn parameters from pytest's fixture resolution
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco

@@ -58,6 +58,24 @@ def test_pack_unpack_roundtrip(bits, n, seed):
     assert (np.asarray(back) == np.asarray(vals)).all()
 
 
+@settings(max_examples=20, deadline=None)
+@given(
+    bits=st.sampled_from([1, 2, 4, 8, 16]),
+    n=st.integers(1, 500),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_word_aligned_fast_path_matches_scatter(bits, n, seed):
+    """The shift-OR fast path and the general scatter path must emit
+    identical words for every word-aligned width."""
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.integers(0, 1 << bits, n), jnp.uint32)
+    fast = codec.pack_bits(vals, bits)
+    slow = codec.pack_bits_scatter(vals, bits)
+    assert (np.asarray(fast) == np.asarray(slow)).all()
+    assert (np.asarray(codec.unpack_bits(fast, bits, n))
+            == np.asarray(codec.unpack_bits_gather(slow, bits, n))).all()
+
+
 # --- cell code (lossless on data bits) --------------------------------------------
 
 @settings(max_examples=25, deadline=None)

@@ -1,12 +1,21 @@
-"""FRAC pack/unpack Pallas kernel vs the jnp codec oracle."""
+"""FRAC pack/unpack Pallas kernels vs the jnp codec oracle.
+
+Covers the seed pack32/unpack32 word kernels and the fused
+quantize→pack pipeline (frac_quant_pack + the ops dispatch): words,
+scales AND decoded floats must be bit-identical to core/frac/codec.py
+across k ∈ {2, 4, 8, 16}, odd lengths (block padding), every dispatch
+mode, and stochastic-rounding rng on/off."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.frac import codec
-from repro.kernels.frac_pack import ops as fops
+from repro.kernels.frac_pack import frac_quant_pack, ops as fops
 from repro.kernels.frac_pack.frac_pack import pack32, unpack32
+
+MODES = ("jnp", "pallas_interpret")
 
 
 @pytest.mark.parametrize("k", [2, 4, 8, 16])
@@ -34,11 +43,10 @@ def test_fused_tensor_path_matches_codec(k, rows, cols, seed):
     x = jnp.asarray(rng.normal(size=(rows, cols)), jnp.float32)
     blob_k = fops.encode_tensor(x, kbits=k)
     blob_r = codec.frac_encode_tensor(x, kbits=k)
-    wr = np.asarray(blob_r["words"])
-    assert (np.asarray(blob_k["words"])[: len(wr)] == wr).all()
+    assert (np.asarray(blob_k["words"]) == np.asarray(blob_r["words"])).all()
     xk = np.asarray(fops.decode_tensor(blob_k))
     xr = np.asarray(codec.frac_decode_tensor(blob_r))
-    assert np.allclose(xk, xr, atol=1e-5)
+    assert (xk == xr).all()
 
 
 def test_dtype_sweep():
@@ -47,3 +55,91 @@ def test_dtype_sweep():
         blob = fops.encode_tensor(x, kbits=8)
         back = fops.decode_tensor(blob)
         assert back.dtype == dt and back.shape == x.shape
+
+
+# --- fused quantize→pack pipeline ------------------------------------------------
+
+
+@pytest.mark.parametrize("k", [2, 4, 8, 16])
+@pytest.mark.parametrize("n", [255, 256, 257, 1000, 4096])
+def test_fused_pipeline_bit_exact_all_k(k, n):
+    """Fused encode/decode == oracle, bit-for-bit: words, scales AND
+    decoded floats, for every supported k, padded and exact lengths."""
+    rng = np.random.default_rng(k * 1000 + n)
+    x = jnp.asarray(rng.normal(size=n), jnp.float32)
+    ref = codec.frac_encode_tensor(x, kbits=k)
+    ref_dec = np.asarray(codec.frac_decode_tensor(ref))
+    for mode in MODES:
+        blob = fops.encode_tensor(x, kbits=k, mode=mode)
+        assert (np.asarray(blob["words"]) == np.asarray(ref["words"])).all(), mode
+        assert (np.asarray(blob["scales"]) == np.asarray(ref["scales"])).all(), mode
+        dec = np.asarray(fops.decode_tensor(blob, mode=mode))
+        assert (dec == ref_dec).all(), mode
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    k=st.sampled_from([2, 4, 8, 16]),
+    n=st.integers(1, 2000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_pipeline_property_roundtrip(k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=n) * rng.uniform(0.01, 100), jnp.float32)
+    ref = codec.frac_encode_tensor(x, kbits=k)
+    ref_dec = np.asarray(codec.frac_decode_tensor(ref))
+    blob = fops.encode_tensor(x, kbits=k, mode="jnp")
+    assert (np.asarray(blob["words"]) == np.asarray(ref["words"])).all()
+    assert (np.asarray(fops.decode_tensor(blob)) == ref_dec).all()
+    # quantization error bound survives the fused path
+    scales = np.asarray(blob["scales"])
+    bound = scales.max() / ((1 << k) - 1) * 1.01 + 1e-7
+    assert np.abs(ref_dec - np.asarray(x)).max() <= bound
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("k", [2, 4, 8, 16])
+def test_fused_pipeline_stochastic_rounding_matches_oracle(k, mode):
+    """Same rng key -> identical words with stochastic rounding on."""
+    rng_np = np.random.default_rng(k)
+    x = jnp.asarray(rng_np.normal(size=1000), jnp.float32)
+    key = jax.random.PRNGKey(k)
+    ref = codec.frac_encode_tensor(x, kbits=k, rng=key)
+    blob = fops.encode_tensor(x, kbits=k, rng=key, mode=mode)
+    assert (np.asarray(blob["words"]) == np.asarray(ref["words"])).all()
+    # and rng on/off genuinely differ (stochastic vs nearest)
+    det = fops.encode_tensor(x, kbits=k, mode=mode)
+    assert not (np.asarray(det["words"]) == np.asarray(blob["words"])).all()
+
+
+def test_fused_kernel_direct_quant_pack_roundtrip():
+    """frac_quant_pack.quant_pack/unpack_dequant without the dispatch."""
+    x = jnp.asarray(np.random.default_rng(3).normal(size=3000), jnp.float32)
+    for k in frac_quant_pack.SUPPORTED_K:
+        words, scales = frac_quant_pack.quant_pack(x, k, interpret=True)
+        codes_ref, scales_ref = codec.quantize_blocks(x, k)
+        assert (np.asarray(words)
+                == np.asarray(codec.pack_bits(codes_ref, k))).all()
+        assert (np.asarray(scales) == np.asarray(scales_ref)).all()
+        back = frac_quant_pack.unpack_dequant(words, scales, k, x.shape[0],
+                                              interpret=True)
+        ref = codec.dequantize_blocks(codes_ref, scales_ref, k, x.shape[0])
+        assert (np.asarray(back) == np.asarray(ref)).all()
+
+
+def test_fake_quant_matches_encode_decode():
+    x = jnp.asarray(np.random.default_rng(5).normal(size=2000), jnp.float32)
+    for k in (2, 4, 8):
+        fq = fops.fake_quant(x, k)
+        ed = fops.decode_tensor(fops.encode_tensor(x, kbits=k))
+        assert (np.asarray(fq) == np.asarray(ed)).all()
+
+
+def test_dispatch_fractional_k_falls_back():
+    """k=6 (not word-aligned) must still round-trip via the jnp codec."""
+    x = jnp.asarray(np.random.default_rng(6).normal(size=700), jnp.float32)
+    blob = fops.encode_tensor(x, kbits=6)
+    ref = codec.frac_encode_tensor(x, kbits=6)
+    assert (np.asarray(blob["words"]) == np.asarray(ref["words"])).all()
+    assert (np.asarray(fops.decode_tensor(blob))
+            == np.asarray(codec.frac_decode_tensor(ref))).all()

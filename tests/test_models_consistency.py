@@ -40,8 +40,21 @@ def _roundtrip(arch, n_steps=3):
         lf = np.asarray(logits_f, np.float32)
         d = np.abs(ld - lf).max()
         assert d < TOL, f"{arch} step {i}: decode/forward drift {d}"
-        agree = (ld.argmax(-1) == lf.argmax(-1)).mean()
-        assert agree >= 0.5, f"{arch} step {i}: argmax agreement {agree}"
+        # always: decode's argmax token must be drift-close to the
+        # forward max (runs even when every logit is near-tied)
+        near = lf >= lf.max(-1, keepdims=True) - 2 * TOL
+        picked = near[np.arange(near.shape[0]), ld.argmax(-1)]
+        assert picked.all(), f"{arch} step {i}: decode argmax outside tol"
+        # strict argmax agreement only where the top-2 gap clears the
+        # documented tolerance; random-init logits can be tied to
+        # within bf16 noise.  Fixed gate (not the observed drift) so a
+        # regression can't widen its own exemption.
+        srt = np.sort(lf, axis=-1)
+        confident = (srt[:, -1] - srt[:, -2]) > 2 * TOL
+        if confident.any():
+            agree = (ld.argmax(-1)[confident]
+                     == lf.argmax(-1)[confident]).mean()
+            assert agree >= 0.5, f"{arch} step {i}: argmax agreement {agree}"
 
 
 @pytest.mark.parametrize("arch", [
