@@ -38,9 +38,12 @@ def main():
               f"{t_end:7.0f} P/E cycles")
 
     print("== checkpoint through the FRAC tier ==")
+    # frac11 is the fractional-width point: 11-bit codewords (the
+    # 11-bits-in-7-cells m=3/α=7 cell code) straddle uint32 boundaries
+    # and ride the scatter-free cross-word-carry fast path
     mcfg = get_tiny("llama3.2-3b")
     params = model.init_params(mcfg, jax.random.PRNGKey(0))
-    for mode in ("exact", "frac8", "frac4"):
+    for mode in ("exact", "frac11", "frac8", "frac4"):
         d = tempfile.mkdtemp(prefix=f"frac_ckpt_{mode}_")
         m = CheckpointManager(d, mode=mode)
         res = m.save(1, {"params": params})

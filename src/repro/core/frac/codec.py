@@ -22,6 +22,7 @@ oracle.
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Any
 
@@ -76,16 +77,113 @@ def utilization_table(ms=(2, 3, 4, 5, 6, 7, 8), max_alpha: int = 10):
 
 # ---------------------------------------------------------------------------
 # Bit packing (uint32 stream)
+#
+# Segment layout (shared by the jnp carry path below and the Pallas
+# kernels in kernels/frac_pack): for width k the bit stream repeats with
+# period LCM(k, 32) bits = ``c_seg`` codes = ``w_seg`` words, so a
+# segment is always word-aligned and *self-contained* — a code may
+# straddle a uint32 boundary inside its segment, but never the segment
+# boundary.  All carry bookkeeping (which word a code starts in, its
+# shift, whether it spills into the next word) is therefore a static
+# per-width table, and both pack and unpack unroll it at trace time —
+# no scatters, no data-dependent gathers.
 # ---------------------------------------------------------------------------
 
 
+def seg_geometry(bits: int) -> tuple[int, int]:
+    """(codes per segment, words per segment) for one LCM(bits, 32)
+    period of the packed stream."""
+    g = math.gcd(bits, 32)
+    return 32 // g, bits // g
+
+
+@functools.lru_cache(maxsize=None)
+def seg_layout(bits: int):
+    """Static cross-word-carry table for one segment of width ``bits``.
+
+    Returns (w0, shift, spill, contrib):
+      w0[j]       word code j starts in; shift[j] its bit offset there
+      spill[j]    True when code j crosses into word w0[j]+1
+      contrib[w]  pack recipe for word w: [(j, shift, is_hi_spill), ...]
+    """
+    c_seg, w_seg = seg_geometry(bits)
+    starts = [j * bits for j in range(c_seg)]
+    w0 = [s // 32 for s in starts]
+    shift = [s % 32 for s in starts]
+    spill = [shift[j] + bits > 32 for j in range(c_seg)]
+    contrib: list[list[tuple[int, int, bool]]] = [[] for _ in range(w_seg)]
+    for j in range(c_seg):
+        contrib[w0[j]].append((j, shift[j], False))
+        if spill[j]:
+            # the spill always lands in the next word of the SAME
+            # segment: the last code ends exactly at the segment edge
+            contrib[w0[j] + 1].append((j, 32 - shift[j], True))
+    return w0, shift, spill, contrib
+
+
+def carry_unpack_segments(w2: jax.Array, bits: int) -> jax.Array:
+    """(rows, w_seg) segment words -> (rows, c_seg) uint32 codes via the
+    static carry table: per code column, a take of its start word (and,
+    for straddlers, the next word), then shift-OR of the two halves.
+    The single jnp home of the inverse-carry bit-twiddling — used by
+    ``unpack_bits`` and the fused decode in ``kernels/frac_pack/ops``."""
+    w0, shift, spill, _ = seg_layout(bits)
+    # next word within the segment (never read past it: spills only
+    # come from codes with w0 <= w_seg - 2)
+    nxt = jnp.pad(w2[:, 1:], ((0, 0), (0, 1)))
+    idx = jnp.asarray(w0)
+    lo = jnp.take(w2, idx, axis=1)
+    hi = jnp.take(nxt, idx, axis=1)
+    sh = jnp.asarray(shift, jnp.uint32)[None, :]
+    hish = jnp.asarray([(32 - s) % 32 for s in shift], jnp.uint32)[None, :]
+    use_hi = jnp.asarray(spill)[None, :]
+    mask = jnp.uint32((1 << bits) - 1)
+    return ((lo >> sh) | jnp.where(use_hi, hi << hish, 0)) & mask
+
+
+def _pack_bits_carry(values: jax.Array, bits: int) -> jax.Array:
+    """Scatter-free pack for any width via per-segment cross-word carry:
+    each output word is an OR of statically-known shifted code columns
+    (lo part in the code's start word, hi spill into the next)."""
+    c_seg, w_seg = seg_geometry(bits)
+    n = values.shape[0]
+    n_words = -(-(n * bits) // 32)
+    v = _pad_to(values.astype(jnp.uint32), c_seg).reshape(-1, c_seg)
+    _, _, _, contrib = seg_layout(bits)
+    cols = []
+    for w in range(w_seg):
+        acc = None
+        for j, s, is_hi in contrib[w]:
+            term = (v[:, j] >> np.uint32(s)) if is_hi \
+                else (v[:, j] << np.uint32(s))
+            acc = term if acc is None else acc | term
+        cols.append(acc)
+    # padded codes are zero, so the trailing padded words are zero and
+    # truncation reproduces the exact ceil(n·bits/32) stream
+    return jnp.stack(cols, axis=1).reshape(-1)[:n_words]
+
+
+def _unpack_bits_carry(packed: jax.Array, bits: int, n: int) -> jax.Array:
+    """Inverse of ``_pack_bits_carry``: pad/segment the word stream and
+    run the shared carry unpack."""
+    c_seg, w_seg = seg_geometry(bits)
+    n_seg = -(-n // c_seg)
+    need = n_seg * w_seg
+    w = packed
+    if w.shape[0] < need:
+        w = jnp.pad(w, (0, need - w.shape[0]))
+    vals = carry_unpack_segments(w[:need].reshape(n_seg, w_seg), bits)
+    return vals.reshape(-1)[:n]
+
+
 def pack_bits_scatter(values: jax.Array, bits: int) -> jax.Array:
-    """General (any bit width) pack via scatter-add.  Codewords may
-    straddle word boundaries, so each value contributes a lo part and a
-    hi spill; the ``.at[].add`` scatters serialize badly on accelerators,
-    which is why the word-aligned widths take the vectorized path in
-    ``pack_bits``.  Kept as the fractional-bit path and as the seed
-    baseline for the codec-throughput benchmark."""
+    """Seed pack via scatter-add, any width.  Codewords may straddle
+    word boundaries, so each value contributes a lo part and a hi spill;
+    the ``.at[].add`` scatters serialize badly on accelerators.  Kept
+    ONLY as the property-test oracle and the seed baseline for the
+    codec-throughput benchmark — production paths go through
+    ``pack_bits`` (shift-OR for aligned widths, segment carry
+    otherwise)."""
     n = values.shape[0]
     n_words = -(-(n * bits) // 32)
     values = values.astype(jnp.uint32)
@@ -102,7 +200,9 @@ def pack_bits_scatter(values: jax.Array, bits: int) -> jax.Array:
 
 
 def unpack_bits_gather(packed: jax.Array, bits: int, n: int) -> jax.Array:
-    """General inverse of pack_bits_scatter -> (n,) uint32."""
+    """Seed inverse of pack_bits_scatter -> (n,) uint32, via a
+    data-dependent gather per code.  Test oracle / bench baseline only,
+    like ``pack_bits_scatter``."""
     start = jnp.arange(n, dtype=jnp.uint32) * bits
     word = start // 32
     off = start % 32
@@ -116,11 +216,12 @@ def unpack_bits_gather(packed: jax.Array, bits: int, n: int) -> jax.Array:
 def pack_bits(values: jax.Array, bits: int) -> jax.Array:
     """values: (N,) uint32, each < 2^bits -> packed (ceil(N·bits/32),) uint32.
 
-    Word-aligned widths (32 % bits == 0: the quantizer's k ∈ {2,4,8,16})
-    take a scatter-free reshape + shift-OR path: 32/bits codes land in
-    one word, so a single sum over disjoint bit ranges builds the word.
-    Fractional widths (11-bits-in-7-cells codewords) fall back to the
-    scatter path; both produce identical words."""
+    Word-aligned widths (32 % bits == 0: k ∈ {1,2,4,8,16}) take a
+    reshape + shift-OR path: 32/bits codes land in one word, so a
+    single sum over disjoint bit ranges builds the word.  Fractional
+    widths (the 11-bits-in-7-cells codewords) take the segment
+    cross-word-carry path — also scatter-free.  Every width 1..32 emits
+    words bit-identical to the ``pack_bits_scatter`` oracle."""
     if 32 % bits == 0:
         c = 32 // bits
         n = values.shape[0]
@@ -129,18 +230,19 @@ def pack_bits(values: jax.Array, bits: int) -> jax.Array:
         shifts = jnp.arange(c, dtype=jnp.uint32) * bits
         # disjoint bit ranges: sum == or, and sum reduces on the VPU
         return (v << shifts[None, :]).sum(axis=1, dtype=jnp.uint32)
-    return pack_bits_scatter(values, bits)
+    return _pack_bits_carry(values, bits)
 
 
 def unpack_bits(packed: jax.Array, bits: int, n: int) -> jax.Array:
-    """Inverse of pack_bits -> (n,) uint32."""
+    """Inverse of pack_bits -> (n,) uint32 (scatter/gather-free for
+    every width, like the pack side)."""
     if 32 % bits == 0:
         c = 32 // bits
         shifts = jnp.arange(c, dtype=jnp.uint32) * bits
         mask = jnp.uint32((1 << bits) - 1)
         vals = (packed[:, None] >> shifts[None, :]) & mask
         return vals.reshape(-1)[:n]
-    return unpack_bits_gather(packed, bits, n)
+    return _unpack_bits_carry(packed, bits, n)
 
 
 # ---------------------------------------------------------------------------

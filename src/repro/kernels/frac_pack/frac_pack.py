@@ -3,9 +3,10 @@
 The checkpoint/optimizer-state/grad-compression paths move billions of
 k-bit codes per step; this kernel packs them into uint32 words with pure
 VPU shift/or traffic, tiled so each grid cell stays in VMEM.  It covers
-the word-aligned codes (k ∈ {2, 4, 8, 16} — the quantizer's settings);
-fractional-bit codewords (the 11-bits-in-7-cells cases) use the general
-jnp codec (core/frac/codec.py), which is also this kernel's oracle.
+the word-aligned codes (k ∈ {2, 4, 8, 16}); fractional-bit codewords
+(the 11-bits-in-7-cells cases) take the cross-word-carry kernel pair in
+``frac_carry_pack.py``, which handles every width 1–16.  The jnp codec
+(core/frac/codec.py) is both kernels' oracle.
 
 Memory-bound by design: the roofline win is that checkpoint bytes drop
 k/32-fold before they ever leave HBM.

@@ -15,16 +15,25 @@ the checkpoint / grad-compress / KV-cache paths are built around
 "don't let overhead eat the operational savings").
 
 Layout trick: the flat tensor is reshaped host-side (free, row-major)
-to ``(n_blocks, words_per_block, codes_per_word)`` so that the in-kernel
-pack is a shift-OR over the *last* axis only — no in-kernel reshape, no
-strided lane access, no scatter.  Code ``[b, w, j]`` is flat element
-``b·256 + w·c + j``, exactly the interleaved order of
-``codec.pack_bits`` word ``b·8k + w`` offset ``k·j``, so the emitted
-words are bit-identical to the ``core/frac/codec.py`` oracle.
+to ``(n_blocks, segments_per_block, codes_per_segment)`` so that the
+in-kernel pack is a static shift-OR over the *last* axis only — no
+in-kernel reshape, no strided lane access, no scatter.  A segment is
+one LCM(k, 32)-bit period of the packed stream: ``c_seg = 32/gcd(k,32)``
+codes in exactly ``w_seg = k/gcd(k,32)`` words, word-aligned and
+self-contained (see ``frac_carry_pack.py`` for the layout writeup).
+Code ``[b, s, j]`` is flat element ``b·256 + s·c_seg + j`` and lands in
+output word ``b·8k + s·w_seg + (j·k)//32`` at offset ``(j·k) % 32`` —
+exactly ``codec.pack_bits`` order, so the emitted words are
+bit-identical to the ``core/frac/codec.py`` oracle.  For word-aligned
+k the segment degenerates to w_seg = 1 and this is the PR-1 layout
+unchanged; for fractional k (the 11-bits-in-7-cells cell codes) the
+per-segment carry table from ``codec.seg_layout`` splits straddling
+codes into a lo shift into their start word plus a hi spill into the
+next, both OR-ed in statically.
 
-Supported k ∈ {2, 4, 8, 16} (word-aligned: 32 % k == 0).  Fractional
-bit widths (the 11-bits-in-7-cells cell codes) stay on the jnp codec;
-see ops.encode_tensor for the dispatch.
+Supported k: every width 1–16 (fractional widths included — this is
+what puts the whole ``bits_for(m, α)`` degradation ladder on the fused
+path).  See ops.encode_tensor for the dispatch.
 
 Stochastic rounding: the caller passes the *same* uniforms the oracle
 would draw (``jax.random.uniform(rng, (n_blocks, 256))``), keeping the
@@ -33,8 +42,12 @@ fused path bit-exact under rng as well.  On-TPU this could move to
 
 Measured on the CI host (CPU, jnp fallback engaged by the ops
 dispatch, 1M-element fp32): fused encode ~60x over the seed
-scatter-based two-pass encode at k=8 (~70x at k=4), fused decode
-1.1–1.4x over the seed gather path.  See ``benchmarks/bench_frac.py``
+scatter-based two-pass encode at k=8 (~70x at k=4, ~50x at the
+fractional k=11); fused decode ~3.5–4.3x over the seed gather path for
+aligned k (the two-stage unpack→dequantize in ops.py keeps the heavy
+pass fused) and ~1.1–1.8x at fractional k, where decode is bound by
+the per-code column takes — the remaining fractional-decode win is
+TPU-side kernel fusion.  See ``benchmarks/bench_frac.py``
 codec-throughput rows for live numbers (BENCH_frac.json via
 ``run.py --json``).
 """
@@ -47,16 +60,25 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.frac.codec import BLOCK
+from repro.core.frac.codec import BLOCK, seg_geometry, seg_layout
 
 TILE_BLOCKS = 32          # 256-element blocks per grid cell (32 KiB fp32 in)
 
-SUPPORTED_K = (2, 4, 8, 16)
+SUPPORTED_K = tuple(range(1, 17))
 
 
 def words_per_block(k: int) -> int:
     """uint32 words one 256-element block packs into (256·k/32 = 8k)."""
     return BLOCK * k // 32
+
+
+def block_layout(k: int) -> tuple[int, int, int]:
+    """(segments per block, codes per segment, words per segment).
+
+    A 256-element block is always a whole number of segments (c_seg is
+    a power of two ≤ 32), and S·w_seg == words_per_block(k)."""
+    c_seg, w_seg = seg_geometry(k)
+    return BLOCK // c_seg, c_seg, w_seg
 
 
 # ---------------------------------------------------------------------------
@@ -66,12 +88,15 @@ def words_per_block(k: int) -> int:
 
 def _encode_kernel(x_ref, o_words_ref, o_scales_ref, *, k: int,
                    u_ref=None):
-    """One pass: absmax scale → quantize → shift-OR pack.
+    """One pass: absmax scale → quantize → carry-table shift-OR pack.
 
-    x tile: (TB, wpb, c) fp32; words out: (TB, wpb) uint32; scales out:
-    (TB, 1) fp32.  The last axis c = 32/k is the pack axis."""
+    x tile: (TB, S, c_seg) fp32; words out: (TB, S, w_seg) uint32;
+    scales out: (TB, 1) fp32.  The last axis is the pack axis; the
+    static ``seg_layout`` table splits boundary-straddling codes into
+    lo/hi contributions (w_seg == 1 for aligned k: no straddlers)."""
     q = (1 << k) - 1
-    c = 32 // k
+    _, _, w_seg = block_layout(k)
+    _, _, _, contrib = seg_layout(k)
     x = x_ref[...]
     scale = jnp.max(jnp.abs(x), axis=(1, 2), keepdims=True) + 1e-12
     t = (x / scale + 1.0) * (0.5 * q)
@@ -85,22 +110,34 @@ def _encode_kernel(x_ref, o_words_ref, o_scales_ref, *, k: int,
     else:
         t = jnp.round(t)
     codes = jnp.clip(t, 0, q).astype(jnp.uint32)
-    word = codes[:, :, 0]
-    for j in range(1, c):                    # disjoint bit ranges: or-accumulate
-        word = word | (codes[:, :, j] << jnp.uint32(k * j))
-    o_words_ref[...] = word
+    cols = []
+    for w in range(w_seg):                   # disjoint bit ranges: or-accumulate
+        acc = None
+        for j, s, is_hi in contrib[w]:
+            term = (codes[:, :, j] >> jnp.uint32(s)) if is_hi \
+                else (codes[:, :, j] << jnp.uint32(s))
+            acc = term if acc is None else acc | term
+        cols.append(acc)
+    o_words_ref[...] = jnp.stack(cols, axis=-1)
     o_scales_ref[...] = scale[:, 0, :]
 
 
 def _decode_kernel(words_ref, scales_ref, o_ref, *, k: int):
-    """Inverse pass: shift-AND unpack → dequantize against block scale."""
+    """Inverse pass: static carry unpack → dequantize against block
+    scale.  Straddling codes OR their start word's high bits with the
+    next word's low bits (the inverse carry)."""
     q = (1 << k) - 1
-    c = 32 // k
+    _, c_seg, _ = block_layout(k)
+    w0, shift, spill, _ = seg_layout(k)
     mask = jnp.uint32(q)
-    w = words_ref[...]                       # (TB, wpb) uint32
-    cols = [((w >> jnp.uint32(k * j)) & mask).astype(jnp.float32)
-            for j in range(c)]
-    codes = jnp.stack(cols, axis=-1)         # (TB, wpb, c)
+    w = words_ref[...]                       # (TB, S, w_seg) uint32
+    cols = []
+    for j in range(c_seg):
+        v = w[:, :, w0[j]] >> jnp.uint32(shift[j])
+        if spill[j]:
+            v = v | (w[:, :, w0[j] + 1] << jnp.uint32(32 - shift[j]))
+        cols.append((v & mask).astype(jnp.float32))
+    codes = jnp.stack(cols, axis=-1)         # (TB, S, c_seg)
     scale = scales_ref[...]                  # (TB, 1)
     # same fusion-immune form as codec.dequantize_blocks (bit-exact):
     # exact integer 2c - q, constant fp32 reciprocal, plain multiplies
@@ -126,28 +163,27 @@ def _quant_pack_call(x3, u3, k: int, stochastic: bool, interpret: bool):
     nb = x3.shape[0]
     grid = pl.cdiv(nb, TILE_BLOCKS)
     gb = grid * TILE_BLOCKS
-    wpb = words_per_block(k)
-    c = 32 // k
+    S, c_seg, w_seg = block_layout(k)
     x3 = _pad_blocks(x3, nb, gb)
     kern = partial(_encode_kernel, k=k)
-    in_specs = [pl.BlockSpec((TILE_BLOCKS, wpb, c), lambda i: (i, 0, 0))]
+    in_specs = [pl.BlockSpec((TILE_BLOCKS, S, c_seg), lambda i: (i, 0, 0))]
     args = [x3]
     if stochastic:
         kern = lambda x_ref, u_ref, ow, os: _encode_kernel(  # noqa: E731
             x_ref, ow, os, k=k, u_ref=u_ref)
-        in_specs.append(pl.BlockSpec((TILE_BLOCKS, wpb, c),
+        in_specs.append(pl.BlockSpec((TILE_BLOCKS, S, c_seg),
                                      lambda i: (i, 0, 0)))
         args.append(_pad_blocks(u3, nb, gb))
     words, scales = pl.pallas_call(
         kern,
         out_shape=(
-            jax.ShapeDtypeStruct((gb, wpb), jnp.uint32),
+            jax.ShapeDtypeStruct((gb, S, w_seg), jnp.uint32),
             jax.ShapeDtypeStruct((gb, 1), jnp.float32),
         ),
         grid=(grid,),
         in_specs=in_specs,
         out_specs=(
-            pl.BlockSpec((TILE_BLOCKS, wpb), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_BLOCKS, S, w_seg), lambda i: (i, 0, 0)),
             pl.BlockSpec((TILE_BLOCKS, 1), lambda i: (i, 0)),
         ),
         interpret=interpret,
@@ -160,45 +196,43 @@ def quant_pack(flat: jax.Array, k: int, *, rng: jax.Array | None = None,
     """flat (N,) float -> (words (⌈N/256⌉·8k,) uint32, scales (⌈N/256⌉,)).
 
     Bit-identical to ``codec.quantize_blocks`` + ``codec.pack_bits``."""
-    assert 32 % k == 0 and k in SUPPORTED_K, f"fused path needs k|32, got {k}"
+    assert k in SUPPORTED_K, f"fused path needs 1 <= k <= 16, got {k}"
     flat = flat.reshape(-1).astype(jnp.float32)
     n = flat.shape[0]
     nb = -(-n // BLOCK)
     pad = nb * BLOCK - n
     if pad:
         flat = jnp.pad(flat, (0, pad))
-    wpb = words_per_block(k)
-    c = 32 // k
-    x3 = flat.reshape(nb, wpb, c)
+    S, c_seg, _ = block_layout(k)
+    x3 = flat.reshape(nb, S, c_seg)
     u3 = None
     if rng is not None:
         # identical draw to the oracle: uniform(rng, (nb, BLOCK))
-        u3 = jax.random.uniform(rng, (nb, BLOCK)).reshape(nb, wpb, c)
+        u3 = jax.random.uniform(rng, (nb, BLOCK)).reshape(nb, S, c_seg)
     else:
-        u3 = jnp.zeros((0, wpb, c), jnp.float32)   # unused placeholder
+        u3 = jnp.zeros((0, S, c_seg), jnp.float32)   # unused placeholder
     return _quant_pack_call(x3, u3, k, rng is not None, interpret)
 
 
 @partial(jax.jit, static_argnames=("k", "interpret"))
-def _unpack_dequant_call(w2, scales2, k: int, interpret: bool):
-    nb = w2.shape[0]
+def _unpack_dequant_call(w3, scales2, k: int, interpret: bool):
+    nb = w3.shape[0]
     grid = pl.cdiv(nb, TILE_BLOCKS)
     gb = grid * TILE_BLOCKS
-    wpb = words_per_block(k)
-    c = 32 // k
-    w2 = _pad_blocks(w2, nb, gb)
+    S, c_seg, w_seg = block_layout(k)
+    w3 = _pad_blocks(w3, nb, gb)
     scales2 = _pad_blocks(scales2, nb, gb)
     x3 = pl.pallas_call(
         partial(_decode_kernel, k=k),
-        out_shape=jax.ShapeDtypeStruct((gb, wpb, c), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((gb, S, c_seg), jnp.float32),
         grid=(grid,),
         in_specs=[
-            pl.BlockSpec((TILE_BLOCKS, wpb), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_BLOCKS, S, w_seg), lambda i: (i, 0, 0)),
             pl.BlockSpec((TILE_BLOCKS, 1), lambda i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((TILE_BLOCKS, wpb, c), lambda i: (i, 0, 0)),
+        out_specs=pl.BlockSpec((TILE_BLOCKS, S, c_seg), lambda i: (i, 0, 0)),
         interpret=interpret,
-    )(w2, scales2)
+    )(w3, scales2)
     return x3[:nb].reshape(-1)
 
 
@@ -206,10 +240,11 @@ def unpack_dequant(words: jax.Array, scales: jax.Array, k: int, n: int, *,
                    interpret: bool = True) -> jax.Array:
     """Inverse of quant_pack -> (n,) fp32.  Matches
     ``codec.unpack_bits`` + ``codec.dequantize_blocks``."""
-    assert 32 % k == 0 and k in SUPPORTED_K, f"fused path needs k|32, got {k}"
+    assert k in SUPPORTED_K, f"fused path needs 1 <= k <= 16, got {k}"
     nb = scales.shape[0]
-    wpb = words_per_block(k)
-    assert words.shape[0] == nb * wpb, (words.shape, nb, wpb)
-    flat = _unpack_dequant_call(words.reshape(nb, wpb),
+    S, c_seg, w_seg = block_layout(k)
+    assert words.shape[0] == nb * words_per_block(k), \
+        (words.shape, nb, words_per_block(k))
+    flat = _unpack_dequant_call(words.reshape(nb, S, w_seg),
                                 scales.reshape(nb, 1), k, interpret)
     return flat[:n]

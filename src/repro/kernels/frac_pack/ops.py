@@ -12,13 +12,17 @@ through this module, so backend selection lives in exactly one place:
   mode="pallas_interpret"
                  same kernel through the Pallas interpreter (tests/CPU
                  debugging; slow but bit-exact).
-  mode="jnp"     single-jit fused jnp path: quantize_blocks + the
-                 scatter-free shift-OR pack from core/frac/codec.py.
-                 XLA fuses the two, so this is also one pass — the fast
-                 fallback wherever Mosaic isn't available.
-  mode=None      auto: "pallas" on TPU for word-aligned k, else "jnp".
-                 Fractional bit widths (32 % k != 0) always use "jnp",
-                 which internally falls back to the scatter codec.
+  mode="jnp"     fused jnp path: quantize_blocks + the scatter-free
+                 pack from core/frac/codec.py (shift-OR for aligned k,
+                 segment cross-word carry for fractional k) in one jit;
+                 decode runs as a fused elementwise stage plus a
+                 reshape stage (XLA's CPU backend will not fuse
+                 through the flat reshape, so splitting it keeps the
+                 unpack→dequantize pass at memory bandwidth).  The
+                 fast fallback wherever Mosaic isn't available.
+  mode=None      auto: "pallas" on TPU, else "jnp" — for EVERY width
+                 1..16; fractional widths (32 % k != 0) use the same
+                 kernels via the cross-word-carry segment layout.
 
 All modes produce bit-identical blobs ({"words", "scales", "meta"},
 same schema as ``codec.frac_encode_tensor``), with the pure-jnp codec
@@ -31,11 +35,14 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.frac import codec
 from repro.kernels.frac_pack import frac_quant_pack
 
 Blob = dict[str, Any]
+
+VALID_MODES = ("pallas", "pallas_interpret", "jnp")
 
 
 def default_mode(kbits: int) -> str:
@@ -48,14 +55,14 @@ def default_mode(kbits: int) -> str:
 
     forced = os.environ.get("REPRO_FRAC_MODE")
     if forced:
-        if forced not in ("pallas", "pallas_interpret", "jnp"):
+        if forced not in VALID_MODES:
             raise ValueError(
                 f"REPRO_FRAC_MODE={forced!r}: expected one of "
-                "pallas | pallas_interpret | jnp")
+                + " | ".join(VALID_MODES))
         if forced.startswith("pallas") \
                 and kbits not in frac_quant_pack.SUPPORTED_K:
-            # the env var is a global preference: fractional widths
-            # still route to jnp
+            # the env var is a global preference: widths outside the
+            # kernels' 1..16 range still route to jnp
             return "jnp"
         return forced
     if kbits in frac_quant_pack.SUPPORTED_K \
@@ -104,11 +111,15 @@ def _resolve_mode(kbits: int, mode: str | None) -> str:
     kernel probe — never silently switching backend; only the auto /
     env-var 'pallas' preference falls back to jnp on probe failure."""
     explicit = mode is not None
+    if explicit and mode not in VALID_MODES:
+        raise ValueError(
+            f"mode={mode!r}: expected one of " + " | ".join(VALID_MODES))
     if explicit and mode.startswith("pallas") \
             and kbits not in frac_quant_pack.SUPPORTED_K:
         raise ValueError(
-            f"mode={mode!r} requires k in {frac_quant_pack.SUPPORTED_K}, "
-            f"got k={kbits} (fractional widths use mode='jnp')")
+            f"mode={mode!r} requires 1 <= k <= 16 "
+            f"(fused kernels cover every such width, fractional "
+            f"included), got k={kbits}")
     mode = mode or default_mode(kbits)
     if mode == "pallas" and not _pallas_ok(kbits):
         if explicit:
@@ -136,11 +147,41 @@ def _encode_jnp_rng(flat, rng, kbits: int):
     return codec.pack_bits(codes, kbits), scales
 
 
-@partial(jax.jit, static_argnames=("kbits", "n"))
-def _decode_jnp(words, scales, kbits: int, n: int):
-    n_cells = -(-n // codec.BLOCK) * codec.BLOCK
-    codes = codec.unpack_bits(words, kbits, n_cells)
-    return codec.dequantize_blocks(codes, scales, kbits, n)
+@partial(jax.jit, static_argnames=("kbits",))
+def _decode_jnp_blocks(words, scales, kbits: int):
+    """Fused unpack→dequantize -> (n_blocks, S, c_seg) fp32.
+
+    Kept in block layout on purpose: one elementwise pass from packed
+    words to dequantized floats (bit-identical arithmetic to
+    ``codec.dequantize_blocks``).  The flat reshape happens in
+    ``_finish_decode`` — XLA's CPU backend treats a reshaped output as
+    a fusion root and would serialize this whole pass behind it,
+    costing ~3x; two stages keep the heavy pass at memory bandwidth."""
+    q = (1 << kbits) - 1
+    nb = scales.shape[0]
+    S, c_seg, w_seg = frac_quant_pack.block_layout(kbits)
+    inv_q = float(np.float32(1.0) / np.float32(q))
+    sc = scales[:, None, None] * inv_q
+    if w_seg == 1:
+        # aligned: every word holds c_seg whole codes, broadcast shift
+        shifts = (jnp.arange(c_seg, dtype=jnp.uint32) * kbits)[None, None, :]
+        w3 = words.reshape(nb, S, 1)
+        cb = ((w3 >> shifts) & jnp.uint32(q)).astype(jnp.float32)
+        return (cb * 2.0 - q) * sc
+    # fractional: the shared static cross-word-carry unpack
+    # (codec.carry_unpack_segments) — a take per code column plus
+    # shift-ORs, one segment row per LCM(k,32)-bit period
+    vals = codec.carry_unpack_segments(words.reshape(nb * S, w_seg), kbits)
+    cb = vals.astype(jnp.float32).reshape(nb, S, c_seg)
+    return (cb * 2.0 - q) * sc
+
+
+@partial(jax.jit, static_argnames=("shape", "dtype", "n"))
+def _finish_decode(x3, shape: tuple, dtype: str, n: int):
+    flat = x3.reshape(-1)
+    if n != flat.shape[0]:
+        flat = flat[:n]
+    return flat.reshape(shape).astype(dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -180,9 +221,9 @@ def decode_tensor(blob: Blob, *, mode: str | None = None) -> jax.Array:
         flat = frac_quant_pack.unpack_dequant(
             blob["words"], blob["scales"], kbits, n,
             interpret=(mode == "pallas_interpret"))
-    else:
-        flat = _decode_jnp(blob["words"], blob["scales"], kbits, n)
-    return flat.reshape(shape).astype(dtype)
+        return flat.reshape(shape).astype(dtype)
+    x3 = _decode_jnp_blocks(blob["words"], blob["scales"], kbits)
+    return _finish_decode(x3, tuple(shape), dtype, n)
 
 
 def frac_zeros_like(x: jax.Array, kbits: int = 8, *,
@@ -242,5 +283,11 @@ def fake_quant_tree(tree: Any, kbits: int) -> Any:
 
 def pack_codes(codes: jax.Array, kbits: int) -> jax.Array:
     """(N,) uint32 codes < 2^k -> packed uint32 words (scatter-free for
-    word-aligned k)."""
+    every width: shift-OR when aligned, segment carry when not)."""
     return codec.pack_bits(codes, kbits)
+
+
+def unpack_codes(words: jax.Array, kbits: int, n: int) -> jax.Array:
+    """Inverse of pack_codes -> (n,) uint32 codes.  Gather-free and
+    shard_map/vmap-safe for every width 1..32."""
+    return codec.unpack_bits(words, kbits, n)

@@ -152,9 +152,12 @@ class ServeEngine:
             if jnp.issubdtype(leaf.dtype, jnp.floating):
                 full = leaf.size * leaf.dtype.itemsize
                 self.stats.kv_bytes_full += full
-                # k bits per element + one fp32 scale per quant block
-                self.stats.kv_bytes_frac += leaf.size * k // 8 \
-                    + (-(-leaf.size // BLOCK)) * 4
+                # packed uint32 words (exact also for fractional k,
+                # e.g. the 11-bit cell-code dial) + one fp32 scale per
+                # quant block
+                n_blocks = -(-leaf.size // BLOCK)
+                self.stats.kv_bytes_frac += \
+                    (-(-(n_blocks * BLOCK * k) // 32)) * 4 + n_blocks * 4
         return fops.fake_quant_tree(cache, k)
 
     def _grow_cache(self, cache, B: int, cur: int, target: int):

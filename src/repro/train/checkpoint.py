@@ -15,11 +15,18 @@ snapshot write is one kernel pass per leaf instead of three jnp passes.
 Modes:
   exact  — raw little-endian bytes, zstd-compressed: bit-exact resume
            (the training default).
-  frac8/frac6/frac4 — FRAC-quantized payloads: the *snapshot tier* the
-           nonvolatile runtime writes every step (lossy is acceptable
-           for power-loss snapshots; exact checkpoints continue at the
-           usual cadence).  Bytes/param drop 4–8×, which is what makes
-           per-step durability affordable (paper §II-A nonvolatility).
+  frac<k>  — FRAC-quantized payloads for ANY width 1 <= k <= 16 (frac8,
+           frac4, and fractional cell-code widths like frac11 — the
+           11-bits-in-7-cells point of the degradation ladder): the
+           *snapshot tier* the nonvolatile runtime writes every step
+           (lossy is acceptable for power-loss snapshots; exact
+           checkpoints continue at the usual cadence).  Bytes/param
+           drop 32/k-fold, which is what makes per-step durability
+           affordable (paper §II-A nonvolatility).  Fractional widths
+           pack scatter-free via the segment cross-word-carry layout
+           (codec.seg_layout / the fused kernels in
+           kernels/frac_pack/frac_quant_pack.py; the layout itself is
+           documented in frac_carry_pack.py).
 
 Fault tolerance: integrity digests (SHA3-256 — same construction as the
 Pallas kernel, hashlib fast path on host) are verified on restore;

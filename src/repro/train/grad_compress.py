@@ -58,6 +58,11 @@ def compressed_allreduce_mean(x_stacked: jax.Array, mesh, axis: str = "data",
     (tiny payload), quantize locally, psum the *integer codes* — the
     wire body carries k-bit entropy instead of fp32.  Returns the (N,)
     dequantized mean, replicated.
+
+    Any width 1..16 works: the pack/unpack helpers are scatter-free
+    for fractional k too (segment cross-word carry), so a fractional
+    ``bits_for(m, α)`` dial — e.g. k=11 — shrinks the wire payload to
+    exactly ceil(N·k/32) words.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -66,8 +71,6 @@ def compressed_allreduce_mean(x_stacked: jax.Array, mesh, axis: str = "data",
     n_padded = n + pad
     nsh = mesh.shape[axis]
     q = (1 << kbits) - 1
-    c = 32 // kbits
-    assert 32 % kbits == 0, "wire path needs k | 32 (use ef_compress otherwise)"
 
     def local(xs):                          # xs: (1, N) local row
         flat = jnp.pad(xs.reshape(-1).astype(jnp.float32), (0, pad))
@@ -76,16 +79,16 @@ def compressed_allreduce_mean(x_stacked: jax.Array, mesh, axis: str = "data",
         gscale = jax.lax.pmax(scale, axis)  # shared scale (tiny wire cost)
         t = (xb / gscale[:, None] + 1.0) * 0.5 * q
         codes = jnp.clip(jnp.round(t), 0, q).astype(jnp.uint32).reshape(-1)
-        # pack k-bit codes -> uint32 words (scatter-free shift-OR path):
+        # pack k-bit codes -> uint32 words (scatter-free for every k):
         # THIS is the wire payload
         words = fops.pack_codes(codes, kbits)
-        gathered = jax.lax.all_gather(words, axis)      # (nsh, n/c) words
+        gathered = jax.lax.all_gather(words, axis)  # (nsh, ceil(n·k/32))
         # local decode + mean (gather-then-reduce compressed DP); unpack
-        # every shard's words at once — (nsh, n/c, c) shift-AND instead
-        # of the seed's strided .at[j::c] scatter
-        shifts = jnp.arange(c, dtype=jnp.uint32) * kbits
-        cols = (gathered[:, :, None] >> shifts[None, None, :]) & jnp.uint32(q)
-        acc = cols.astype(jnp.float32).sum(0).reshape(-1)   # (n_padded,)
+        # every shard's words at once — static shift-ORs instead of the
+        # seed's strided .at[j::c] scatter
+        cols = jax.vmap(
+            lambda w: fops.unpack_codes(w, kbits, n_padded))(gathered)
+        acc = cols.astype(jnp.float32).sum(0)           # (n_padded,)
         mean_codes = (acc / nsh).reshape(-1, codec.BLOCK)
         out = (mean_codes / q * 2.0 - 1.0) * gscale[:, None]
         return out.reshape(-1)[:n]

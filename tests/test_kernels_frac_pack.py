@@ -1,10 +1,12 @@
 """FRAC pack/unpack Pallas kernels vs the jnp codec oracle.
 
-Covers the seed pack32/unpack32 word kernels and the fused
-quantize→pack pipeline (frac_quant_pack + the ops dispatch): words,
-scales AND decoded floats must be bit-identical to core/frac/codec.py
-across k ∈ {2, 4, 8, 16}, odd lengths (block padding), every dispatch
-mode, and stochastic-rounding rng on/off."""
+Covers the seed pack32/unpack32 word kernels, the fractional-width
+carry kernels (frac_carry_pack) and the fused quantize→pack pipeline
+(frac_quant_pack + the ops dispatch): words, scales AND decoded floats
+must be bit-identical to core/frac/codec.py across every width 1..16
+(including the fractional cell-code widths 3/5/7/11/13), odd lengths
+(block padding), every dispatch mode, and stochastic-rounding rng
+on/off."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,10 +14,12 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.frac import codec
-from repro.kernels.frac_pack import frac_quant_pack, ops as fops
+from repro.kernels.frac_pack import frac_carry_pack, frac_quant_pack, \
+    ops as fops
 from repro.kernels.frac_pack.frac_pack import pack32, unpack32
 
 MODES = ("jnp", "pallas_interpret")
+FRACTIONAL_K = (3, 5, 7, 11, 13)
 
 
 @pytest.mark.parametrize("k", [2, 4, 8, 16])
@@ -135,11 +139,101 @@ def test_fake_quant_matches_encode_decode():
         assert (np.asarray(fq) == np.asarray(ed)).all()
 
 
-def test_dispatch_fractional_k_falls_back():
-    """k=6 (not word-aligned) must still round-trip via the jnp codec."""
-    x = jnp.asarray(np.random.default_rng(6).normal(size=700), jnp.float32)
-    blob = fops.encode_tensor(x, kbits=6)
-    ref = codec.frac_encode_tensor(x, kbits=6)
+def test_dispatch_resolves_fractional_k_first_class():
+    """Fractional widths are first-class in the dispatch: every width
+    1..16 resolves to a real backend (auto mode), explicit kernel modes
+    are accepted for them, and out-of-range widths only work via jnp."""
+    for k in range(1, 17):
+        assert fops.default_mode(k) in fops.VALID_MODES
+        assert fops._resolve_mode(k, "pallas_interpret") == "pallas_interpret"
+    # k > 16: no kernel — auto resolves to jnp, explicit pallas raises
+    assert fops._resolve_mode(23, None) == "jnp"
+    with pytest.raises(ValueError):
+        fops._resolve_mode(23, "pallas_interpret")
+
+
+# --- fractional widths: cross-word-carry kernels ---------------------------------
+
+
+@pytest.mark.parametrize("k", FRACTIONAL_K)
+@pytest.mark.parametrize("n", [255, 256, 257, 1000])
+def test_fractional_fused_pipeline_bit_exact(k, n):
+    """Fused quantize→pack and unpack→dequantize at fractional widths:
+    words, scales AND decoded floats bit-identical to the codec oracle,
+    through the interpret-mode kernel and the jnp dispatch."""
+    rng = np.random.default_rng(k * 1000 + n)
+    x = jnp.asarray(rng.normal(size=n), jnp.float32)
+    ref = codec.frac_encode_tensor(x, kbits=k)
+    ref_dec = np.asarray(codec.frac_decode_tensor(ref))
+    for mode in MODES:
+        blob = fops.encode_tensor(x, kbits=k, mode=mode)
+        assert (np.asarray(blob["words"])
+                == np.asarray(ref["words"])).all(), (k, mode)
+        assert (np.asarray(blob["scales"])
+                == np.asarray(ref["scales"])).all(), (k, mode)
+        dec = np.asarray(fops.decode_tensor(blob, mode=mode))
+        assert (dec == ref_dec).all(), (k, mode)
+
+
+@pytest.mark.parametrize("k", FRACTIONAL_K)
+def test_fractional_kernel_direct_words_scales_decode(k):
+    """frac_quant_pack without the dispatch, fractional k: the kernel's
+    carry table must reproduce the codec words exactly."""
+    x = jnp.asarray(np.random.default_rng(k).normal(size=3000), jnp.float32)
+    words, scales = frac_quant_pack.quant_pack(x, k, interpret=True)
+    codes_ref, scales_ref = codec.quantize_blocks(x, k)
+    assert (np.asarray(words)
+            == np.asarray(codec.pack_bits(codes_ref, k))).all()
+    assert (np.asarray(scales) == np.asarray(scales_ref)).all()
+    back = frac_quant_pack.unpack_dequant(words, scales, k, x.shape[0],
+                                          interpret=True)
+    ref = codec.dequantize_blocks(codes_ref, scales_ref, k, x.shape[0])
+    assert (np.asarray(back) == np.asarray(ref)).all()
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("k", FRACTIONAL_K)
+def test_fractional_stochastic_rounding_matches_oracle(k, mode):
+    """Stochastic-rounding bump parity at fractional widths: the same
+    rng key produces identical words, and rng on/off genuinely differ."""
+    x = jnp.asarray(np.random.default_rng(k + 77).normal(size=1000),
+                    jnp.float32)
+    key = jax.random.PRNGKey(k)
+    ref = codec.frac_encode_tensor(x, kbits=k, rng=key)
+    blob = fops.encode_tensor(x, kbits=k, rng=key, mode=mode)
     assert (np.asarray(blob["words"]) == np.asarray(ref["words"])).all()
-    assert (np.asarray(fops.decode_tensor(blob))
-            == np.asarray(codec.frac_decode_tensor(ref))).all()
+    det = fops.encode_tensor(x, kbits=k, mode=mode)
+    assert not (np.asarray(det["words"]) == np.asarray(blob["words"])).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(1, 16),
+    n=st.integers(1, 1200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_carry_kernel_pair_property(k, n, seed):
+    """pack_carry/unpack_carry (the fractional-width Pallas pair) vs
+    codec.pack_bits AND the seed scatter oracle, any width 1..16."""
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(
+        rng.integers(0, 1 << k, n, dtype=np.int64).astype(np.uint32))
+    got = frac_carry_pack.pack_carry(vals, k, interpret=True)
+    want = codec.pack_bits_scatter(vals, k)
+    assert got.shape == want.shape
+    assert (np.asarray(got) == np.asarray(want)).all()
+    back = frac_carry_pack.unpack_carry(got, k, n, interpret=True)
+    assert (np.asarray(back) == np.asarray(vals)).all()
+
+
+def test_fused_pipeline_all_widths_1_to_16():
+    """Every width the degradation ladder can emit takes the fused
+    path and round-trips bit-exactly (jnp dispatch)."""
+    x = jnp.asarray(np.random.default_rng(42).normal(size=777), jnp.float32)
+    for k in range(1, 17):
+        ref = codec.frac_encode_tensor(x, kbits=k)
+        blob = fops.encode_tensor(x, kbits=k, mode="jnp")
+        assert (np.asarray(blob["words"])
+                == np.asarray(ref["words"])).all(), k
+        assert (np.asarray(fops.decode_tensor(blob, mode="jnp"))
+                == np.asarray(codec.frac_decode_tensor(ref))).all(), k
