@@ -1,39 +1,138 @@
 """ESE end-to-end estimates (Fig 4(a) pipeline) over real dry-run cells:
-latency → operational + embodied energy → carbon-aware bill."""
+latency → operational + embodied energy → carbon-aware bill, all through
+the typed records API (RooflineRecord -> TaskSpec -> EnergyReport).
+
+Quick mode (``ESE_BENCH_QUICK=1`` or no results/dryrun.json): runs the
+identical pipeline over canned roofline records so CI can smoke the
+estimator + JSON report schema without a multi-hour dry-run sweep.
+Every mode round-trips one EnergyReport through the stable
+ese-energy-report/v1 JSON schema and fails loudly on drift.
+"""
 from __future__ import annotations
 
 import json
 import os
 
 from repro.core.ese import energy, estimator
+from repro.core.ese.records import (
+    EnergyReport,
+    RooflineRecord,
+    TaskSpec,
+    roofline_records,
+    validate_report_dict,
+)
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
                        "dryrun.json")
 
+# canned cells for quick mode: memory-bound decode, compute-bound train,
+# collective-heavy multi-pod — enough spread to fit the latency head
+_CANNED = {
+    "canned|train_4k|single|baseline": {
+        "arch": "canned-train", "shape": "train_4k", "tag": "baseline",
+        "roofline": {
+            "t_compute_s": 0.80, "t_memory_s": 0.30, "t_collective_s": 0.10,
+            "flops_per_device": 1.6e14, "hbm_bytes_per_device": 2.5e11,
+            "collective_bytes_per_device": 5e9,
+            "step_time_bound_s": 0.80, "chips": 256},
+    },
+    "canned|decode_32k|single|baseline": {
+        "arch": "canned-decode", "shape": "decode_32k", "tag": "baseline",
+        "roofline": {
+            "t_compute_s": 0.02, "t_memory_s": 0.09, "t_collective_s": 0.01,
+            "flops_per_device": 4e12, "hbm_bytes_per_device": 7.4e10,
+            "collective_bytes_per_device": 5e8,
+            "step_time_bound_s": 0.09, "chips": 16},
+    },
+    "canned|train_4k|multi|baseline": {
+        "arch": "canned-multi", "shape": "train_4k", "tag": "baseline",
+        "roofline": {
+            "t_compute_s": 0.40, "t_memory_s": 0.20, "t_collective_s": 0.55,
+            "flops_per_device": 8e13, "hbm_bytes_per_device": 1.6e11,
+            "collective_bytes_per_device": 2.75e10,
+            "step_time_bound_s": 0.55, "chips": 1024},
+    },
+}
+
+
+def _jitter(cells: dict, n: int = 24) -> list[RooflineRecord]:
+    """Quick mode has only 3 canned cells — synthesize scaled variants so
+    the latency head has a trainable spread, like the real sweep."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    base = roofline_records(cells.values())
+    out = list(base)
+    while len(out) < n:
+        r = base[rng.integers(len(base))]
+        s = float(rng.uniform(0.3, 3.0))
+        out.append(RooflineRecord(
+            flops_per_device=r.flops_per_device * s,
+            hbm_bytes_per_device=r.hbm_bytes_per_device * s,
+            collective_bytes_per_device=r.collective_bytes_per_device * s,
+            t_compute_s=r.t_compute_s * s, t_memory_s=r.t_memory_s * s,
+            t_collective_s=r.t_collective_s * s,
+            step_time_bound_s=r.step_time_bound_s * s, chips=r.chips,
+        ))
+    return out
+
+
+def _schema_roundtrip(report: EnergyReport) -> None:
+    """CI schema-drift gate: serialize through real JSON, validate, and
+    rebuild — any shape change raises out of the bench harness."""
+    blob = json.dumps(report.to_json_dict(), sort_keys=True)
+    d = json.loads(blob)
+    validate_report_dict(d)
+    back = EnergyReport.from_json_dict(d)
+    assert back == report, "EnergyReport JSON round-trip drifted"
+
 
 def run() -> list[tuple]:
-    if not os.path.exists(RESULTS):
-        return [("ese_estimates_missing", 0.0, "needs results/dryrun.json")]
-    recs = json.load(open(RESULTS))
-    usable = [r for r in recs.values()
-              if "roofline" in r and r.get("tag") == "baseline"]
-    head = energy.train_latency_head(usable, steps=500)
-    rows = [("ese_latency_head_mape", head[2],
-             "learned latency model vs synthetic measurements")]
-    for key in ("mixtral-8x7b|train_4k|single|baseline",
-                "llama4-maverick-400b-a17b|train_4k|single|baseline",
-                "rwkv6-1.6b|decode_32k|single|baseline"):
-        r = recs.get(key)
+    quick = (os.environ.get("ESE_BENCH_QUICK") == "1"
+             or not os.path.exists(RESULTS))
+    if quick:
+        cells = dict(_CANNED)
+        head_records = _jitter(cells)
+        head_steps = 300
+        rows = [("ese_quick_mode", 1.0, "canned cells (no dryrun.json)")]
+    else:
+        cells = json.load(open(RESULTS))
+        head_records = roofline_records(
+            r for r in cells.values() if r.get("tag") == "baseline")
+        head_steps = 500
+        rows = []
+
+    head = energy.train_latency_head(head_records, steps=head_steps)
+    rows.append(("ese_latency_head_mape", head.mape,
+                 "learned latency model vs synthetic measurements"))
+
+    keys = (tuple(_CANNED) if quick else (
+        "mixtral-8x7b|train_4k|single|baseline",
+        "llama4-maverick-400b-a17b|train_4k|single|baseline",
+        "rwkv6-1.6b|decode_32k|single|baseline"))
+    checked_schema = False
+    for key in keys:
+        r = cells.get(key)
         if r is None or "roofline" not in r:
             continue
-        est = estimator.estimate_task(r, n_steps=1000, latency_head=head,
-                                      net_demand_quantile=0.3)
-        est_g = estimator.estimate_task(r, n_steps=1000, latency_head=head,
-                                        net_demand_quantile=0.3,
-                                        recycled_optin=True)
+        rec = RooflineRecord.from_cell(r)
+        est = estimator.estimate(
+            rec, TaskSpec(n_steps=1000, net_demand_quantile=0.3,
+                          name=key.split("|")[0]),
+            latency_head=head)
+        est_g = estimator.estimate(
+            rec, TaskSpec(n_steps=1000, net_demand_quantile=0.3,
+                          recycled_optin=True, name=key.split("|")[0]),
+            latency_head=head)
+        if not checked_schema:
+            _schema_roundtrip(est)
+            rows.append(("ese_report_schema_roundtrip", 1.0,
+                         "ese-energy-report/v1 JSON survives round-trip"))
+            checked_schema = True
         rows.append((
             f"ese_bill_{r['arch']}_{r['shape']}", est.bill_usd,
             f"usd_per_1k_steps op={est.operational_j/3.6e6:.1f}kWh "
-            f"emb={est.embodied_j/3.6e6:.1f}kWh green=${est_g.bill_usd:.0f}",
+            f"emb={est.embodied_j/3.6e6:.1f}kWh "
+            f"co2={est.co2_kg:.1f}kg green=${est_g.bill_usd:.0f}",
         ))
     return rows

@@ -8,10 +8,12 @@ import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import json
+
 import numpy as np
 
 from repro.configs import get_tiny
-from repro.core.ese import estimator
+from repro.core.ese import RooflineRecord, TaskSpec, estimator
 from repro.serve.engine import ServeEngine
 from repro.train.loop import Trainer, TrainerConfig
 
@@ -25,28 +27,35 @@ def main():
     out = Trainer(mcfg, tcfg).run()
     losses = [m["loss"] for m in out["metrics"]]
     print(f"steps={out['final_step']} loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    train_rep = out["energy_report"]
+    print(f"metered: {train_rep.total_j:.0f} J, "
+          f"{train_rep.co2_kg * 1e3:.2f} g CO2")
 
     print("== serving ==")
     eng = ServeEngine(mcfg, out["params"], max_batch=4)
     for i in range(3):
         eng.submit(np.arange(1 + i, 9 + i, dtype=np.int32), max_new_tokens=8)
     for rid, toks in eng.run().items():
-        print(f"request {rid}: {toks}")
+        rep = eng.reports[rid]
+        print(f"request {rid}: {toks} "
+              f"({rep.detail['j_per_token']:.1f} J/token)")
     print(f"prefills={eng.stats.prefills} decode_steps={eng.stats.decode_steps}")
 
-    print("== ESE estimate (from a canned dry-run record) ==")
-    rec = {"roofline": {
+    print("== ESE estimate (typed records over a canned dry-run cell) ==")
+    rec = RooflineRecord.from_cell({"roofline": {
         "t_compute_s": 0.4, "t_memory_s": 0.7, "t_collective_s": 0.2,
         "flops_per_device": 8e13, "hbm_bytes_per_device": 6e11,
         "collective_bytes_per_device": 1e10,
-        "step_time_bound_s": 0.7, "chips": 256}}
+        "step_time_bound_s": 0.7, "chips": 256}})
     for opt_in in (False, True):
-        est = estimator.estimate_task(rec, n_steps=1000,
-                                      net_demand_quantile=0.3,
-                                      recycled_optin=opt_in)
+        est = estimator.estimate(
+            rec, TaskSpec(n_steps=1000, net_demand_quantile=0.3,
+                          recycled_optin=opt_in, name="quickstart"))
         tag = "recycled fleet" if opt_in else "fresh fleet   "
         print(f"{tag}: {est.operational_j/3.6e6:7.1f} kWh op + "
               f"{est.embodied_j/3.6e6:5.1f} kWh embodied -> ${est.bill_usd:.2f}")
+    print("== EnergyReport (ese-energy-report/v1) ==")
+    print(json.dumps(est.to_json_dict(), indent=1, sort_keys=True))
 
 
 if __name__ == "__main__":

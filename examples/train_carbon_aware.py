@@ -18,10 +18,10 @@ import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
+import json
 
 from repro.configs import get_config, get_tiny
-from repro.core.ese import billing
+from repro.core.ese.meter import MeterConfig, SustainabilityMeter
 from repro.core.power import traces
 from repro.core.power.scheduler import CarbonAwareScheduler, SchedulerConfig
 from repro.train.loop import Trainer, TrainerConfig
@@ -54,13 +54,21 @@ def main():
     # at noon (the midnight start would pause the whole smoke run —
     # which is correct scheduler behaviour, but a boring demo)
     grid = traces.make_trace(days=2, seed=0)
-    supply = (traces.datacenter_supply(grid) / 30.0)[traces.STEPS_PER_DAY // 2:]
+    noon = traces.STEPS_PER_DAY // 2
+    supply = (traces.datacenter_supply(grid) / 30.0)[noon:]
     n_params = None
+
+    # sustainability meter: carbon intensity follows the same grid
+    # window the supply trace was cut from
+    meter = SustainabilityMeter(MeterConfig(
+        carbon_intensity=grid.carbon_intensity_kg_per_kwh[noon:],
+        steps_per_interval=4, derate_optin=True,
+    ), name=mcfg.name)
 
     tcfg = TrainerConfig(
         ckpt_dir=ckpt, ckpt_every=max(10, dims["total_steps"] // 4),
         snapshot_mode="frac8", power_trace=supply,
-        steps_per_power_interval=4, lr=1e-3, **dims,
+        steps_per_power_interval=4, lr=1e-3, meter=meter, **dims,
     )
     sch = CarbonAwareScheduler(SchedulerConfig(use_forecast=False))
     print(f"== {mcfg.name}: {dims['total_steps']} steps, "
@@ -77,6 +85,17 @@ def main():
         print(f"loss:          {losses[0]:.3f} -> {losses[-1]:.3f}")
     print(f"stragglers:    {out['stragglers']}")
 
+    # metered sustainability account for the first (carbon-aware) run
+    rep = out["energy_report"]
+    sched = rep.detail["scheduler"]
+    print(f"ESE report:    {rep.operational_j:.0f} J op + "
+          f"{rep.embodied_j:.1f} J embodied, "
+          f"{rep.co2_kg * 1e3:.2f} g CO2 -> ${rep.bill_usd:.6f}")
+    print(f"scheduler:     avoided {sched['avoided_j']:.0f} J "
+          f"({sched['avoided_co2_kg'] * 1e3:.2f} g CO2) via "
+          f"{sched['paused_steps']} pauses + "
+          f"{sched['derated_steps']} derated steps")
+
     # resume demonstration: extend the run by 25%
     tcfg2 = TrainerConfig(
         ckpt_dir=ckpt, ckpt_every=tcfg.ckpt_every,
@@ -87,13 +106,9 @@ def main():
     print(f"resumed ->     step {out2['final_step']} "
           f"loss {out2['final_loss']:.3f}")
 
-    # ESE bill for the run (rough: mean step time x steps)
-    mean_dt = float(np.mean([m["step_time_s"] for m in out2["metrics"]]))
-    kwh = mean_dt * len(out2["metrics"]) * 150.0 / 3.6e6   # 150W host draw
-    bill = billing.carbon_aware(kwh * 3.6e6, kwh * 3.6e5,
-                                net_demand_quantile=0.3, derate_optin=True)
-    print(f"ESE bill:      ${bill.usd:.4f} "
-          f"(surge={bill.breakdown['surge']:.2f}, derate opt-in)")
+    # the resumed run's report serializes to the stable JSON schema
+    print(json.dumps(out2["energy_report"].to_json_dict(), indent=1,
+                     sort_keys=True))
 
 
 if __name__ == "__main__":

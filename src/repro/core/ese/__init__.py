@@ -1,0 +1,31 @@
+"""ESE — the paper's Environmental Sustainability Estimator, as one
+typed API.
+
+Data model (records.py): RooflineRecord / TaskSpec / EnergyReport,
+validated ``from_dict``/``to_dict`` + the stable ese-energy-report/v1
+JSON schema.  Ahead-of-time: ``estimate`` (estimator.py).  Online:
+``SustainabilityMeter`` (meter.py), wired into train/loop.py and
+serve/engine.py.  See docs/ese_api.md.
+"""
+from repro.core.ese import billing, embodied, energy, estimator, predictor
+from repro.core.ese.billing import Bill
+from repro.core.ese.embodied import HardwareUnit, TaskFootprint
+from repro.core.ese.energy import LatencyHead, StepEnergy
+from repro.core.ese.estimator import estimate, estimate_task
+from repro.core.ese.meter import MeterConfig, SustainabilityMeter
+from repro.core.ese.records import (
+    REPORT_SCHEMA,
+    EnergyReport,
+    RooflineRecord,
+    TaskSpec,
+    roofline_records,
+    validate_report_dict,
+)
+
+__all__ = [
+    "Bill", "EnergyReport", "HardwareUnit", "LatencyHead", "MeterConfig",
+    "REPORT_SCHEMA", "RooflineRecord", "StepEnergy", "SustainabilityMeter",
+    "TaskFootprint", "TaskSpec", "billing", "embodied", "energy",
+    "estimate", "estimate_task", "estimator", "predictor",
+    "roofline_records", "validate_report_dict",
+]

@@ -18,6 +18,21 @@ class Bill:
     usd: float
     breakdown: dict
 
+    def to_dict(self) -> dict:
+        d = {"usd": self.usd}
+        d.update(self.breakdown)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Bill":
+        if "usd" not in d:
+            raise ValueError("Bill: missing key 'usd'")
+        usd = d["usd"]
+        if isinstance(usd, bool) or not isinstance(usd, (int, float)):
+            raise ValueError(
+                f"Bill: key 'usd' must be a number, got {type(usd).__name__}")
+        return cls(float(usd), {k: v for k, v in d.items() if k != "usd"})
+
 
 BASE_USD_PER_KWH = 0.18
 EMBODIED_USD_PER_KWH = 0.26     # embodied energy priced above operational

@@ -61,5 +61,20 @@ class TaskFootprint:
     def total_j(self) -> float:
         return self.operational_j + self.embodied_j
 
-    def co2_kg(self, grid_kg_per_kwh: float = 0.24) -> float:
-        return self.total_j / 3.6e6 * grid_kg_per_kwh
+    def co2_split_kg(self, grid_kg_per_kwh: float = 0.24,
+                     embodied_kg_per_kwh: float | None = None) -> dict:
+        """Operational/embodied CO2 split (Chasing Carbon's first-class
+        accounting): operational carbon follows the task's grid
+        intensity; embodied carbon was emitted at manufacture time, so
+        it may carry its own (global-average) intensity."""
+        emb_rate = (grid_kg_per_kwh if embodied_kg_per_kwh is None
+                    else embodied_kg_per_kwh)
+        return {
+            "operational": self.operational_j / 3.6e6 * grid_kg_per_kwh,
+            "embodied": self.embodied_j / 3.6e6 * emb_rate,
+        }
+
+    def co2_kg(self, grid_kg_per_kwh: float = 0.24,
+               embodied_kg_per_kwh: float | None = None) -> float:
+        split = self.co2_split_kg(grid_kg_per_kwh, embodied_kg_per_kwh)
+        return split["operational"] + split["embodied"]

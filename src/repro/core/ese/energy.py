@@ -11,13 +11,16 @@ Embodied energy: the paper's linear model
 """
 from __future__ import annotations
 
+from collections.abc import Mapping
 from dataclasses import dataclass
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import hw
+from repro.core.ese.records import RooflineRecord
 
 # fraction of dynamic power attributed to each subsystem at full tilt
 W_COMPUTE, W_MEMORY, W_ICI = 0.55, 0.33, 0.12
@@ -34,12 +37,24 @@ class StepEnergy:
         return self.step_j / max(tokens, 1)
 
 
-def operational_step_energy(roofline: dict, chips: int) -> StepEnergy:
-    """White-box model from a dry-run roofline record (§Roofline terms)."""
-    t = max(roofline["step_time_bound_s"], 1e-9)
-    u_c = roofline["t_compute_s"] / t
-    u_m = roofline["t_memory_s"] / t
-    u_i = roofline["t_collective_s"] / t
+def operational_step_energy(roofline: RooflineRecord,
+                            chips: int | None = None) -> StepEnergy:
+    """White-box model from a typed dry-run record (§Roofline terms).
+
+    ``chips`` defaults to ``roofline.chips``; raw dicts are rejected —
+    go through ``RooflineRecord.from_dict`` (or the legacy
+    ``estimator.estimate_task`` adapter) first.
+    """
+    if isinstance(roofline, Mapping):
+        raise TypeError(
+            "operational_step_energy now takes a RooflineRecord; build one "
+            "with RooflineRecord.from_dict(...) or call the legacy "
+            "estimator.estimate_task dict adapter")
+    chips = roofline.chips if chips is None else int(chips)
+    t = max(roofline.step_time_bound_s, 1e-9)
+    u_c = roofline.t_compute_s / t
+    u_m = roofline.t_memory_s / t
+    u_i = roofline.t_collective_s / t
     dyn = (hw.CHIP_TDP_W - hw.CHIP_IDLE_W)
     chip_w = hw.CHIP_IDLE_W + dyn * (W_COMPUTE * u_c + W_MEMORY * u_m + W_ICI * u_i)
     total_w = (chip_w + hw.HOST_OVERHEAD_W) * chips
@@ -66,19 +81,18 @@ FEATURES = (
 )
 
 
-def _featurize(recs: list[dict]) -> np.ndarray:
+def _featurize(recs: list[RooflineRecord]) -> np.ndarray:
     rows = []
-    for r in recs:
-        rl = r["roofline"]
-        rows.append([np.log1p(float(rl[k])) for k in FEATURES])
+    for rl in recs:
+        rows.append([np.log1p(float(getattr(rl, k))) for k in FEATURES])
     return np.asarray(rows, np.float32)
 
 
-def synthetic_measurement(rl: dict, rng) -> float:
+def synthetic_measurement(rl: RooflineRecord, rng) -> float:
     """Hidden 'real hardware' generator: imperfect overlap + fixed launch
     overhead + noise.  Stands in for the paper's profiler measurements."""
-    t = (max(rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"])
-         + 0.25 * (rl["t_compute_s"] + rl["t_memory_s"] + rl["t_collective_s"])
+    t = (max(rl.t_compute_s, rl.t_memory_s, rl.t_collective_s)
+         + 0.25 * (rl.t_compute_s + rl.t_memory_s + rl.t_collective_s)
          + 2e-3)
     return t * float(rng.lognormal(0.0, 0.05))
 
@@ -98,14 +112,28 @@ def mlp_forward(p, x):
     return (h @ p["w2"] + p["b2"])[..., 0]
 
 
-def train_latency_head(records: list[dict], seed: int = 0, steps: int = 600):
+class LatencyHead(NamedTuple):
+    """Learned latency refinement — unpacks like the legacy
+    (params, norm, mape) tuple."""
+    params: dict
+    norm: dict
+    mape: float
+
+
+def train_latency_head(records: list[RooflineRecord], seed: int = 0,
+                       steps: int = 600) -> LatencyHead:
     """Fit log-latency from dry-run features against the synthetic
-    measurement generator.  Returns (params, normalization, test_mape)."""
+    measurement generator.  ``records`` are typed ``RooflineRecord``s
+    (use ``records.roofline_records(cells)`` on raw dry-run JSON)."""
     rng = np.random.default_rng(seed)
-    recs = [r for r in records if "roofline" in r]
+    recs = [r for r in records if isinstance(r, RooflineRecord)]
+    if len(recs) != len(records):
+        raise TypeError(
+            "train_latency_head takes RooflineRecords; convert dry-run "
+            "cells with records.roofline_records(...) first")
     x = _featurize(recs)
     y = np.asarray(
-        [np.log(synthetic_measurement(r["roofline"], rng)) for r in recs],
+        [np.log(synthetic_measurement(r, rng)) for r in recs],
         np.float32,
     )
     mu, sd = x.mean(0), x.std(0) + 1e-9
@@ -130,9 +158,9 @@ def train_latency_head(records: list[dict], seed: int = 0, steps: int = 600):
     pred = np.exp(np.asarray(mlp_forward(params, jnp.asarray(xn[n_tr:]))))
     true = np.exp(y[n_tr:])
     mape = float(np.mean(np.abs(pred - true) / true)) if len(true) else 0.0
-    return params, {"mu": mu, "sd": sd}, mape
+    return LatencyHead(params, {"mu": mu, "sd": sd}, mape)
 
 
-def predict_latency(params, norm, record: dict) -> float:
+def predict_latency(params, norm, record: RooflineRecord) -> float:
     x = (_featurize([record]) - norm["mu"]) / norm["sd"]
     return float(np.exp(np.asarray(mlp_forward(params, jnp.asarray(x)))[0]))

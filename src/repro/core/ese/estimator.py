@@ -4,60 +4,110 @@ The paper's hardware estimator compiles user source and extracts
 static + runtime features; on TPU the compiled XLA artifact *is* the
 static feature set (DESIGN.md §2).  Flow:
 
-  (arch, shape, mesh) -> dry-run record -> latency (white-box roofline
-  + learned head) -> operational energy -> embodied energy -> bill.
+  (arch, shape, mesh) -> dry-run RooflineRecord -> latency (white-box
+  roofline + learned head) -> operational energy -> embodied energy ->
+  bill, returned as one typed EnergyReport.
+
+Docstring map of the ESE package (who does what):
+
+  records.py    RooflineRecord / TaskSpec / EnergyReport — the typed,
+                validated, pytree-friendly data model + JSON schema
+  energy.py     white-box operational step energy + learned latency head
+  embodied.py   TBE·latency/lifetime linear model, TaskFootprint
+  billing.py    flat / carbon-aware pricing -> Bill
+  meter.py      SustainabilityMeter — *online* accounting for running
+                train/serve jobs (per-step / per-request EnergyReports)
+  estimator.py  this module — ahead-of-time composition of the above
+  predictor.py  quantile LSTM forecasting net demand / renewables
+
+``estimate`` is the typed entry point.  ``estimate_task`` keeps the
+legacy dict signature one release behind a ``DeprecationWarning``
+adapter (malformed dicts raise ``ValueError`` naming the bad key).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import warnings
+from collections.abc import Mapping
 
 from repro.core.ese import billing, embodied, energy
+from repro.core.ese.records import EnergyReport, RooflineRecord, TaskSpec
 
 
-@dataclass(frozen=True)
-class Estimate:
-    latency_s: float
-    latency_learned_s: float
-    operational_j: float
-    embodied_j: float
-    bill_usd: float
-    detail: dict
-
-
-def estimate_task(
-    record: dict,
-    *,
-    n_steps: int,
-    latency_head=None,
-    net_demand_quantile: float = 0.5,
-    recycled_optin: bool = False,
-) -> Estimate:
-    """record: one dry-run cell (launch/dryrun.py output)."""
-    rl = record["roofline"]
-    chips = int(rl["chips"])
-    step_s = float(rl["step_time_bound_s"])
+def estimate(record: RooflineRecord, spec: TaskSpec, *,
+             latency_head: energy.LatencyHead | tuple | None = None
+             ) -> EnergyReport:
+    """Ahead-of-time estimate: one dry-run cell × one task spec."""
+    if isinstance(record, Mapping):
+        raise TypeError(
+            "estimate takes a RooflineRecord; build one with "
+            "RooflineRecord.from_cell(...) or use the legacy "
+            "estimate_task dict adapter")
+    chips = record.chips
+    step_s = record.step_time_bound_s
     if latency_head is not None:
         params, norm, _ = latency_head
         step_learned = energy.predict_latency(params, norm, record)
     else:
         step_learned = step_s
 
-    se = energy.operational_step_energy(rl, chips)
-    task_s = step_learned * n_steps
-    op_j = se.step_j / max(step_s, 1e-12) * step_learned * n_steps
+    se = energy.operational_step_energy(record)
+    task_s = step_learned * spec.n_steps
+    op_j = se.step_j / max(step_s, 1e-12) * task_s
 
     fp = embodied.TaskFootprint()
-    fp.charge(embodied.tpu_chip(recycled_optin), task_s * chips, op_j)
+    fp.charge(embodied.tpu_chip(spec.recycled_optin), task_s * chips, op_j)
     bill = billing.carbon_aware(
         fp.operational_j, fp.embodied_j,
-        net_demand_quantile=net_demand_quantile,
-        recycled_optin=recycled_optin,
+        net_demand_quantile=spec.net_demand_quantile,
+        recycled_optin=spec.recycled_optin,
+        derate_optin=spec.derate_optin,
     )
-    return Estimate(
-        latency_s=step_s * n_steps,
+    co2 = fp.co2_split_kg(spec.grid_kg_per_kwh)
+    return EnergyReport(
+        task=spec,
+        latency_s=step_s * spec.n_steps,
         latency_learned_s=task_s,
         operational_j=fp.operational_j,
         embodied_j=fp.embodied_j,
+        co2_operational_kg=co2["operational"],
+        co2_embodied_kg=co2["embodied"],
         bill_usd=bill.usd,
-        detail={"step_energy": se.breakdown, "bill": bill.breakdown},
+        detail={"step_energy": se.breakdown, "bill": bill.breakdown,
+                "by_unit": fp.by_unit},
     )
+
+
+def estimate_task(
+    record,
+    *,
+    n_steps: int,
+    latency_head=None,
+    net_demand_quantile: float = 0.5,
+    recycled_optin: bool = False,
+    derate_optin: bool = False,
+) -> EnergyReport:
+    """Legacy front door.  ``record`` may be a typed RooflineRecord or —
+    one release longer, behind a DeprecationWarning — a raw dry-run cell
+    dict (``{"roofline": {...}}``)."""
+    if isinstance(record, Mapping):
+        warnings.warn(
+            "estimate_task(record: dict) is deprecated; pass a typed "
+            "RooflineRecord (records.RooflineRecord.from_cell) and a "
+            "TaskSpec to estimator.estimate instead",
+            DeprecationWarning, stacklevel=2,
+        )
+        record = RooflineRecord.from_cell(record)
+    spec = TaskSpec(
+        n_steps=n_steps,
+        # the old API let billing clip out-of-range quantiles; the
+        # compatibility adapter keeps that tolerance (TaskSpec is strict)
+        net_demand_quantile=min(max(float(net_demand_quantile), 0.0), 1.0),
+        recycled_optin=recycled_optin,
+        derate_optin=derate_optin,
+    )
+    return estimate(record, spec, latency_head=latency_head)
+
+
+# Deprecated alias: the old `Estimate` result type is now the shared
+# EnergyReport record (same field names for latency/energy/bill).
+Estimate = EnergyReport

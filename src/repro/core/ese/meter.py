@@ -1,0 +1,295 @@
+"""SustainabilityMeter — *online* ESE accounting for running jobs.
+
+The ahead-of-time estimator (estimator.py) prices a task before launch;
+this meter does the paper's other half: while a job runs it books, step
+by step (training) or request by request (serving),
+
+  - operational energy: measured wall time × the facility power model
+    (white-box from a ``RooflineRecord`` when the job was dry-run, a
+    flat measured draw otherwise);
+  - carbon: each interval's grid intensity from a ``GridTrace``
+    (``carbon_intensity_kg_per_kwh``), so the same joule is cheap at
+    solar noon and expensive at the evening ramp;
+  - embodied energy: chip occupancy through ``TaskFootprint`` (TBE ·
+    occupancy / lifetime), plus storage occupancy (the serving engine
+    charges FRAC KV bytes through ``embodied.flash_tb(recycled=True)``);
+  - scheduler attribution: energy *avoided* by ``CarbonAwareScheduler``
+    PAUSE / DERATE decisions, so a run can report what carbon-aware
+    behaviour actually saved.
+
+Every reading and the cumulative ``report()`` is a typed
+``EnergyReport`` (records.py) — the same record the estimator returns,
+serializable to the stable ese-energy-report/v1 JSON schema.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro import hw
+from repro.core.ese import billing, embodied, energy
+from repro.core.ese.records import EnergyReport, RooflineRecord, TaskSpec
+
+
+@dataclass(frozen=True)
+class MeterConfig:
+    chips: int = 1
+    flat_w: float = 150.0            # measured wall-plug draw w/o a roofline
+    roofline: RooflineRecord | None = None   # white-box power when dry-run
+    recycled_optin: bool = False
+    derate_optin: bool = False
+    net_demand_quantile: float = 0.5
+    grid_kg_per_kwh: float = 0.24    # fallback when no intensity trace
+    carbon_intensity: np.ndarray | None = None   # kg/kWh per interval
+    steps_per_interval: int = 1
+    step_s_hint: float | None = None  # expected step time before any is seen
+
+
+@dataclass
+class _Totals:
+    steps: int = 0
+    paused_steps: int = 0
+    derated_steps: int = 0
+    requests: int = 0
+    tokens: int = 0
+    wall_s: float = 0.0
+    co2_operational_kg: float = 0.0
+    avoided_pause_j: float = 0.0
+    avoided_derate_j: float = 0.0
+    avoided_co2_kg: float = 0.0
+
+
+class SustainabilityMeter:
+    """Accumulates a running job's energy/carbon and emits EnergyReports.
+
+    Train loop:  ``meter.step(dt, decision=...)`` per executed step and
+    ``meter.pause(...)`` per scheduler-paused interval.  Serving:
+    ``meter.request(tokens, dt, kv_frac_bytes=...)`` per finished
+    request.  ``meter.report()`` is the cumulative account.
+    """
+
+    def __init__(self, cfg: MeterConfig | None = None, *, name: str = "job"):
+        self.cfg = cfg or MeterConfig()
+        # fail at construction, not on the first reading mid-run: every
+        # reading builds a (strictly validated) TaskSpec from these
+        if not 0.0 <= self.cfg.net_demand_quantile <= 1.0:
+            raise ValueError(
+                "MeterConfig: key 'net_demand_quantile' must be in [0, 1], "
+                f"got {self.cfg.net_demand_quantile}")
+        if self.cfg.chips < 1:
+            raise ValueError(
+                f"MeterConfig: key 'chips' must be >= 1, got {self.cfg.chips}")
+        self.name = name
+        self.footprint = embodied.TaskFootprint()
+        self.totals = _Totals()
+        self._dt_mean: float | None = None
+        self._interval_step = 0      # advances per booked step/pause/request
+        self._pending_pauses: list[float] = []   # intensities, see pause()
+        if self.cfg.roofline is not None:
+            se = energy.operational_step_energy(self.cfg.roofline)
+            self.facility_w = float(se.breakdown["facility_w"])
+        else:
+            self.facility_w = (self.cfg.flat_w * self.cfg.chips
+                               * (1.0 + energy.DELIVERY_LOSS) * hw.PUE)
+
+    @classmethod
+    def from_trace(cls, trace, *, steps_per_interval: int = 1,
+                   name: str = "job", **cfg_kwargs) -> "SustainabilityMeter":
+        """Meter whose carbon intensity follows a GridTrace interval by
+        interval (power/traces.py)."""
+        cfg = MeterConfig(
+            carbon_intensity=np.asarray(trace.carbon_intensity_kg_per_kwh),
+            steps_per_interval=steps_per_interval,
+            **cfg_kwargs,
+        )
+        return cls(cfg, name=name)
+
+    # -- per-interval carbon intensity ---------------------------------------
+    def carbon_intensity(self) -> float:
+        """kg CO2 per kWh at the current grid interval.  The interval
+        cursor advances with every booked step, pause, and request;
+        ``seek`` aligns it on resume."""
+        ci = self.cfg.carbon_intensity
+        if ci is None or len(ci) == 0:
+            return self.cfg.grid_kg_per_kwh
+        idx = min(self._interval_step // max(self.cfg.steps_per_interval, 1),
+                  len(ci) - 1)
+        return float(ci[idx])
+
+    def seek(self, step: int) -> None:
+        """Align the carbon-intensity cursor with an absolute step index
+        — a resumed Trainer indexes its power trace by absolute step, so
+        the meter must read the same grid intervals."""
+        self._interval_step = int(step)
+
+    def _step_s_default(self) -> float:
+        """Best guess at one step's wall time before/without measurements
+        (EWMA of seen steps, then the config hint, then the roofline
+        bound)."""
+        if self._dt_mean is not None:
+            return self._dt_mean
+        if self.cfg.step_s_hint is not None:
+            return self.cfg.step_s_hint
+        if self.cfg.roofline is not None:
+            return self.cfg.roofline.step_time_bound_s
+        return 0.0
+
+    # -- online readings -----------------------------------------------------
+    def step(self, dt_s: float, *, decision=None, tokens: int = 0
+             ) -> EnergyReport:
+        """Book one executed training step of wall time ``dt_s``.
+
+        ``decision`` is the interval's CarbonAwareScheduler Decision (if
+        any): a derated step draws ``step_scale`` of full power and the
+        remainder is attributed to the scheduler as avoided energy.
+        """
+        scale = 1.0 if decision is None else max(float(decision.step_scale),
+                                                 0.0)
+        intensity = self.carbon_intensity()
+        op_j = self.facility_w * scale * dt_s
+        emb_before = self.footprint.embodied_j
+        self.footprint.charge(embodied.tpu_chip(self.cfg.recycled_optin),
+                              dt_s * self.cfg.chips, op_j)
+        emb_j = self.footprint.embodied_j - emb_before
+        if scale < 1.0:
+            avoided = self.facility_w * (1.0 - scale) * dt_s
+            self.totals.avoided_derate_j += avoided
+            self.totals.avoided_co2_kg += avoided / 3.6e6 * intensity
+            self.totals.derated_steps += 1
+        co2_op = op_j / 3.6e6 * intensity
+        self.totals.co2_operational_kg += co2_op
+        self.totals.steps += 1
+        self._interval_step += 1
+        self.totals.tokens += int(tokens)
+        self.totals.wall_s += dt_s
+        self._dt_mean = (dt_s if self._dt_mean is None
+                         else 0.9 * self._dt_mean + 0.1 * dt_s)
+        if self._pending_pauses:
+            # start-of-run pauses held back for lack of a step-time
+            # estimate: book them now at the first measured step time,
+            # each at the intensity of its own interval
+            for ci_p in self._pending_pauses:
+                avoided = self.facility_w * dt_s
+                self.totals.avoided_pause_j += avoided
+                self.totals.avoided_co2_kg += avoided / 3.6e6 * ci_p
+            self._pending_pauses.clear()
+        return self._reading(
+            f"{self.name}/step{self.totals.steps - 1}", 1, dt_s, op_j, emb_j,
+            co2_op, intensity,
+            extra={"step_scale": scale,
+                   "decision": getattr(getattr(decision, "action", None),
+                                       "value", "run")},
+        )
+
+    def pause(self, duration_s: float | None = None) -> None:
+        """Book one scheduler-paused interval: no work, no operational
+        draw; the full-rate energy that did NOT happen is attributed to
+        the carbon-aware scheduler.  Before any step has been measured
+        the duration falls back to ``step_s_hint`` / the roofline bound;
+        with neither configured (a run that starts in a low-supply
+        window), the pause is held back and booked retroactively at the
+        first measured step time."""
+        dt = duration_s if duration_s is not None else self._step_s_default()
+        intensity = self.carbon_intensity()
+        self.totals.paused_steps += 1
+        self.totals.steps += 1          # simulated time advances the interval
+        self._interval_step += 1
+        if dt <= 0.0:
+            self._pending_pauses.append(intensity)
+            return
+        avoided = self.facility_w * dt
+        self.totals.avoided_pause_j += avoided
+        self.totals.avoided_co2_kg += avoided / 3.6e6 * intensity
+
+    def request(self, tokens: int, dt_s: float, *, rid=None,
+                kv_frac_bytes: int = 0, kv_occupancy_s: float | None = None
+                ) -> EnergyReport:
+        """Book one finished serving request: its share of wall time at
+        facility power, chip occupancy, and — when the engine holds a
+        FRAC-compressed KV cache — flash-tier occupancy charged through
+        ``embodied.flash_tb(recycled=True)`` (bytes × residency over the
+        per-TB TBE amortization)."""
+        intensity = self.carbon_intensity()
+        op_j = self.facility_w * dt_s
+        emb_before = self.footprint.embodied_j
+        self.footprint.charge(embodied.tpu_chip(self.cfg.recycled_optin),
+                              dt_s * self.cfg.chips, op_j)
+        if kv_frac_bytes > 0:
+            occ = dt_s if kv_occupancy_s is None else kv_occupancy_s
+            self.footprint.charge(embodied.flash_tb(recycled=True),
+                                  occ * kv_frac_bytes / 1e12)
+        emb_j = self.footprint.embodied_j - emb_before
+        co2_op = op_j / 3.6e6 * intensity
+        self.totals.co2_operational_kg += co2_op
+        self.totals.requests += 1
+        self._interval_step += 1     # serving time advances the grid cursor
+        self.totals.tokens += int(tokens)
+        self.totals.wall_s += dt_s
+        name = (f"{self.name}/request{self.totals.requests - 1}"
+                if rid is None else f"{self.name}/request{rid}")
+        return self._reading(
+            name, 1, dt_s, op_j, emb_j, co2_op, intensity,
+            extra={"tokens": int(tokens),
+                   "j_per_token": (op_j + emb_j) / max(int(tokens), 1),
+                   "kv_frac_bytes": int(kv_frac_bytes)},
+        )
+
+    # -- reports -------------------------------------------------------------
+    def report(self, name: str | None = None) -> EnergyReport:
+        """Cumulative EnergyReport for everything metered so far,
+        including the scheduler-attribution detail."""
+        t = self.totals
+        fp = self.footprint
+        return self._reading(
+            name or self.name, max(t.steps, 1), t.wall_s,
+            fp.operational_j, fp.embodied_j, t.co2_operational_kg,
+            self.carbon_intensity(),
+            extra={
+                "tokens": t.tokens,
+                "requests": t.requests,
+                "by_unit": fp.by_unit,
+                "scheduler": {
+                    "paused_steps": t.paused_steps,
+                    "derated_steps": t.derated_steps,
+                    "avoided_pause_j": t.avoided_pause_j,
+                    "avoided_derate_j": t.avoided_derate_j,
+                    "avoided_j": t.avoided_pause_j + t.avoided_derate_j,
+                    "avoided_co2_kg": t.avoided_co2_kg,
+                },
+            },
+        )
+
+    def _reading(self, name, n_steps, dt_s, op_j, emb_j, co2_op, intensity,
+                 *, extra=None) -> EnergyReport:
+        spec = TaskSpec(
+            n_steps=n_steps, name=name,
+            net_demand_quantile=self.cfg.net_demand_quantile,
+            recycled_optin=self.cfg.recycled_optin,
+            derate_optin=self.cfg.derate_optin,
+            grid_kg_per_kwh=self.cfg.grid_kg_per_kwh,
+        )
+        bill = billing.carbon_aware(
+            op_j, emb_j,
+            net_demand_quantile=spec.net_demand_quantile,
+            recycled_optin=spec.recycled_optin,
+            derate_optin=spec.derate_optin,
+        )
+        detail = {"bill": bill.breakdown,
+                  "carbon_intensity_kg_per_kwh": intensity,
+                  "facility_w": self.facility_w}
+        if extra:
+            detail.update(extra)
+        # embodied carbon at the (manufacture-time) default intensity
+        co2_emb = emb_j / 3.6e6 * self.cfg.grid_kg_per_kwh
+        return EnergyReport(
+            task=spec,
+            latency_s=dt_s,
+            latency_learned_s=dt_s,
+            operational_j=op_j,
+            embodied_j=emb_j,
+            co2_operational_kg=co2_op,
+            co2_embodied_kg=co2_emb,
+            bill_usd=bill.usd,
+            detail=detail,
+        )

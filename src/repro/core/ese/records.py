@@ -1,0 +1,301 @@
+"""Typed ESE records — the sustainability API's data model.
+
+Every stage of the estimator pipeline (paper Fig 4(a)) and the online
+``SustainabilityMeter`` speaks these records instead of raw dicts:
+
+  RooflineRecord   one dry-run cell's roofline terms (launch/dryrun.py)
+  TaskSpec         what the user wants priced: steps + billing opt-ins
+  EnergyReport     the output: latency, E_ope/E_emb, CO2 split, bill
+
+All three are frozen dataclasses with validated ``from_dict`` /
+``to_dict`` (malformed input raises ``ValueError`` naming the offending
+key — never a bare ``KeyError`` deep inside energy.py), and
+``RooflineRecord`` is registered as a JAX pytree so records can ride
+through ``jax.tree`` utilities and jitted code untouched.
+
+``EnergyReport.to_json_dict`` emits the stable ``ese-energy-report/v1``
+schema shared by benchmarks/bench_ese_estimates.py, examples, and the
+CI schema-drift check; ``EnergyReport.from_json_dict`` round-trips it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, fields
+from typing import Any, Mapping
+
+import jax
+
+from repro.core.ese.billing import Bill
+
+REPORT_SCHEMA = "ese-energy-report/v1"
+
+
+def _require_number(cls_name: str, d: Mapping, key: str) -> float:
+    if key not in d:
+        raise ValueError(f"{cls_name}: missing key {key!r}")
+    v = d[key]
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        raise ValueError(
+            f"{cls_name}: key {key!r} must be a number, "
+            f"got {type(v).__name__}: {v!r}"
+        )
+    return float(v)
+
+
+def _require_int(cls_name: str, d: Mapping, key: str) -> int:
+    v = _require_number(cls_name, d, key)
+    if v != int(v):
+        raise ValueError(f"{cls_name}: key {key!r} must be an integer, got {v!r}")
+    return int(v)
+
+
+@dataclass(frozen=True)
+class RooflineRecord:
+    """One compiled (arch × shape × mesh) cell's roofline terms.
+
+    Field names match ``launch.roofline.Roofline.as_dict()`` exactly, so
+    ``RooflineRecord.from_dict(rl.as_dict()).to_dict() == rl.as_dict()``
+    and results/dryrun.json keeps its on-disk schema.
+    """
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    t_compute_s: float
+    t_memory_s: float
+    t_collective_s: float
+    step_time_bound_s: float
+    chips: int
+    model_flops: float = 0.0
+    useful_compute_ratio: float = 0.0
+    roofline_fraction: float = 0.0
+    dominant: str = ""
+
+    REQUIRED = (
+        "flops_per_device", "hbm_bytes_per_device",
+        "collective_bytes_per_device", "t_compute_s", "t_memory_s",
+        "t_collective_s", "step_time_bound_s", "chips",
+    )
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "RooflineRecord":
+        # (validation lives here, not __post_init__: pytree unflattening
+        # rebuilds records whose leaves may be tracers)
+        if not isinstance(d, Mapping):
+            raise ValueError(
+                f"RooflineRecord.from_dict expects a mapping, "
+                f"got {type(d).__name__}")
+        kw: dict[str, Any] = {}
+        for k in cls.REQUIRED:
+            if k == "chips":
+                kw[k] = _require_int("RooflineRecord", d, k)
+            else:
+                kw[k] = _require_number("RooflineRecord", d, k)
+        if kw["chips"] < 1:
+            raise ValueError(
+                f"RooflineRecord: key 'chips' must be >= 1, got {kw['chips']}")
+        for k in ("t_compute_s", "t_memory_s", "t_collective_s",
+                  "step_time_bound_s"):
+            if kw[k] < 0:
+                raise ValueError(
+                    f"RooflineRecord: key {k!r} must be >= 0, got {kw[k]}")
+        for k in ("model_flops", "useful_compute_ratio", "roofline_fraction"):
+            if k in d:
+                kw[k] = _require_number("RooflineRecord", d, k)
+        if "dominant" in d:
+            if not isinstance(d["dominant"], str):
+                raise ValueError(
+                    f"RooflineRecord: key 'dominant' must be a string, "
+                    f"got {type(d['dominant']).__name__}")
+            kw["dominant"] = d["dominant"]
+        return cls(**kw)
+
+    @classmethod
+    def from_cell(cls, cell: Mapping) -> "RooflineRecord":
+        """Accept a full dry-run cell (``{"roofline": {...}, ...}``) or a
+        bare roofline mapping."""
+        if not isinstance(cell, Mapping):
+            raise ValueError(
+                f"RooflineRecord.from_cell expects a mapping, "
+                f"got {type(cell).__name__}")
+        if "roofline" in cell:
+            return cls.from_dict(cell["roofline"])
+        if "step_time_bound_s" in cell:     # already a bare roofline
+            return cls.from_dict(cell)
+        raise ValueError(
+            "RooflineRecord: missing key 'roofline' (pass a dry-run cell "
+            "or a bare roofline mapping)")
+
+    def to_dict(self) -> dict:
+        return {f.name: getattr(self, f.name) for f in fields(self)}
+
+
+def roofline_records(cells) -> list[RooflineRecord]:
+    """Typed records from an iterable of dry-run cells; cells without a
+    roofline (skipped / failed compiles) are dropped."""
+    out = []
+    for c in cells:
+        if isinstance(c, RooflineRecord):
+            out.append(c)
+        elif isinstance(c, Mapping) and "roofline" in c:
+            out.append(RooflineRecord.from_cell(c))
+    return out
+
+
+@dataclass(frozen=True)
+class TaskSpec:
+    """What the user asks the data center to price (paper Fig 4(a))."""
+    n_steps: int = 1
+    name: str = "task"
+    net_demand_quantile: float = 0.5
+    recycled_optin: bool = False
+    derate_optin: bool = False
+    grid_kg_per_kwh: float = 0.24
+
+    def __post_init__(self):
+        if self.n_steps < 0:
+            raise ValueError(
+                f"TaskSpec: key 'n_steps' must be >= 0, got {self.n_steps}")
+        if not 0.0 <= self.net_demand_quantile <= 1.0:
+            raise ValueError(
+                "TaskSpec: key 'net_demand_quantile' must be in [0, 1], "
+                f"got {self.net_demand_quantile}")
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "TaskSpec":
+        if not isinstance(d, Mapping):
+            raise ValueError(
+                f"TaskSpec.from_dict expects a mapping, got {type(d).__name__}")
+        kw: dict[str, Any] = {}
+        if "n_steps" in d:
+            kw["n_steps"] = _require_int("TaskSpec", d, "n_steps")
+        for k in ("net_demand_quantile", "grid_kg_per_kwh"):
+            if k in d:
+                kw[k] = _require_number("TaskSpec", d, k)
+        for k in ("recycled_optin", "derate_optin"):
+            if k in d:
+                if not isinstance(d[k], bool):
+                    raise ValueError(
+                        f"TaskSpec: key {k!r} must be a bool, "
+                        f"got {type(d[k]).__name__}")
+                kw[k] = d[k]
+        if "name" in d:
+            if not isinstance(d["name"], str):
+                raise ValueError(
+                    f"TaskSpec: key 'name' must be a string, "
+                    f"got {type(d['name']).__name__}")
+            kw["name"] = d["name"]
+        return cls(**kw)
+
+    def to_dict(self) -> dict:
+        return {f.name: getattr(self, f.name) for f in fields(self)}
+
+
+@dataclass(frozen=True)
+class EnergyReport:
+    """The sustainability API's output record — ahead-of-time estimates
+    (``estimator.estimate``) and live meter readings share this shape.
+
+    Serializes to the stable ``ese-energy-report/v1`` JSON schema:
+
+      {"schema": "ese-energy-report/v1",
+       "task": {...TaskSpec...},
+       "latency_s": ..., "latency_learned_s": ...,
+       "operational_j": ..., "embodied_j": ..., "total_j": ...,
+       "co2_kg": {"operational": ..., "embodied": ..., "total": ...},
+       "bill": {"usd": ..., <billing breakdown>},
+       "detail": {...free-form breakdowns...}}
+    """
+    task: TaskSpec
+    latency_s: float
+    latency_learned_s: float
+    operational_j: float
+    embodied_j: float
+    co2_operational_kg: float
+    co2_embodied_kg: float
+    bill_usd: float
+    detail: dict = field(default_factory=dict, compare=False)
+
+    @property
+    def total_j(self) -> float:
+        return self.operational_j + self.embodied_j
+
+    @property
+    def co2_kg(self) -> float:
+        return self.co2_operational_kg + self.co2_embodied_kg
+
+    def j_per_token(self, tokens: int) -> float:
+        return self.total_j / max(int(tokens), 1)
+
+    def to_json_dict(self) -> dict:
+        bill = Bill(self.bill_usd, self.detail.get("bill", {})).to_dict()
+        return {
+            "schema": REPORT_SCHEMA,
+            "task": self.task.to_dict(),
+            "latency_s": self.latency_s,
+            "latency_learned_s": self.latency_learned_s,
+            "operational_j": self.operational_j,
+            "embodied_j": self.embodied_j,
+            "total_j": self.total_j,
+            "co2_kg": {
+                "operational": self.co2_operational_kg,
+                "embodied": self.co2_embodied_kg,
+                "total": self.co2_kg,
+            },
+            "bill": bill,
+            "detail": {k: v for k, v in self.detail.items() if k != "bill"},
+        }
+
+    @classmethod
+    def from_json_dict(cls, d: Mapping) -> "EnergyReport":
+        validate_report_dict(d)
+        bill = Bill.from_dict(d["bill"])
+        detail = dict(d.get("detail", {}))
+        if bill.breakdown:
+            detail["bill"] = bill.breakdown
+        return cls(
+            task=TaskSpec.from_dict(d["task"]),
+            latency_s=float(d["latency_s"]),
+            latency_learned_s=float(d["latency_learned_s"]),
+            operational_j=float(d["operational_j"]),
+            embodied_j=float(d["embodied_j"]),
+            co2_operational_kg=float(d["co2_kg"]["operational"]),
+            co2_embodied_kg=float(d["co2_kg"]["embodied"]),
+            bill_usd=bill.usd,
+            detail=detail,
+        )
+
+
+def validate_report_dict(d: Mapping) -> None:
+    """Validate the ese-energy-report/v1 JSON shape; raises ValueError
+    naming the missing/ill-typed key on schema drift."""
+    if not isinstance(d, Mapping):
+        raise ValueError(
+            f"EnergyReport: expects a mapping, got {type(d).__name__}")
+    if d.get("schema") != REPORT_SCHEMA:
+        raise ValueError(
+            f"EnergyReport: key 'schema' must be {REPORT_SCHEMA!r}, "
+            f"got {d.get('schema')!r}")
+    for k in ("task", "co2_kg", "bill"):
+        if k not in d or not isinstance(d[k], Mapping):
+            raise ValueError(f"EnergyReport: missing or non-mapping key {k!r}")
+    for k in ("latency_s", "latency_learned_s", "operational_j",
+              "embodied_j", "total_j"):
+        _require_number("EnergyReport", d, k)
+    for k in ("operational", "embodied", "total"):
+        _require_number("EnergyReport co2_kg", d["co2_kg"], k)
+    _require_number("EnergyReport bill", d["bill"], "usd")
+    TaskSpec.from_dict(d["task"])
+
+
+# -- pytree registration ------------------------------------------------------
+# RooflineRecord rides through jax.tree utilities / jit with its timing
+# and byte terms as leaves and (chips, dominant) as static metadata.
+jax.tree_util.register_dataclass(
+    RooflineRecord,
+    data_fields=[
+        "flops_per_device", "hbm_bytes_per_device",
+        "collective_bytes_per_device", "t_compute_s", "t_memory_s",
+        "t_collective_s", "step_time_bound_s", "model_flops",
+        "useful_compute_ratio", "roofline_fraction",
+    ],
+    meta_fields=["chips", "dominant"],
+)

@@ -366,3 +366,17 @@ def frac_zeros_like(x: jax.Array, kbits: int = 8) -> dict[str, Any]:
 
 def compressed_bytes(blob: dict[str, Any]) -> int:
     return int(blob["words"].size * 4 + blob["scales"].size * 4)
+
+
+def compressed_nbytes(n: int, kbits: int) -> int:
+    """Exact encoded size (packed words + per-block scales) for ``n``
+    values at width ``kbits`` — what ``compressed_bytes`` would report
+    on ``frac_encode_tensor`` of an n-element tensor, without
+    materializing the blob.  Single source of truth for every consumer
+    that books modeled FRAC capacity (e.g. the serving engine's KV-cache
+    accounting), exact also for fractional widths: codes are padded to
+    whole BLOCKs, and BLOCK is a multiple of every segment length
+    32/gcd(k, 32), so the word stream is exactly ceil(cells·k/32)."""
+    n_blocks = -(-int(n) // BLOCK)
+    n_cells = n_blocks * BLOCK
+    return (-(-(n_cells * int(kbits)) // 32)) * 4 + n_blocks * 4

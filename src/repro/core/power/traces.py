@@ -16,6 +16,10 @@ import numpy as np
 STEP_MIN = 5                     # trace resolution (minutes)
 STEPS_PER_DAY = 24 * 60 // STEP_MIN
 
+# Marginal intensity of the non-renewable remainder (gas-peaker-like;
+# the ESE meter scales this by the fossil share of each interval).
+FOSSIL_KG_PER_KWH = 0.40
+
 
 @dataclass
 class GridTrace:
@@ -33,6 +37,16 @@ class GridTrace:
         """Demand not covered by renewables (the paper's 'net energy
         demand'); negative = surplus."""
         return self.demand - self.renewable
+
+    @property
+    def carbon_intensity_kg_per_kwh(self) -> np.ndarray:
+        """Grid carbon intensity per interval: the fossil share of
+        demand (net demand clipped at zero) times the marginal
+        non-renewable intensity.  Surplus-renewable intervals are
+        carbon-free."""
+        fossil_share = np.clip(self.net_demand, 0.0, None) \
+            / np.maximum(self.demand, 1.0)
+        return FOSSIL_KG_PER_KWH * fossil_share
 
     def __len__(self) -> int:
         return len(self.solar)

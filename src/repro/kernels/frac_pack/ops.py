@@ -235,6 +235,12 @@ def compressed_bytes(blob: Blob) -> int:
     return codec.compressed_bytes(blob)
 
 
+def compressed_nbytes(n: int, kbits: int) -> int:
+    """Encoded size for n values at width kbits without building the
+    blob (see core/frac/codec.compressed_nbytes)."""
+    return codec.compressed_nbytes(n, kbits)
+
+
 # ---------------------------------------------------------------------------
 # fake-quant (quantize→dequantize, no packed bytes materialized):
 # ef_compress numerics and the emulated FRAC KV cache

@@ -10,6 +10,7 @@ import traceback
 import jax
 
 from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.core.ese.records import RooflineRecord
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import (
     HloCost,
@@ -77,6 +78,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, tag: str = "baseline",
         model_flops=model_flops_for(cfg, shape, _n_active_matmul(cfg)),
         chips=chips,
     )
+    # typed round-trip: the ESE record validates the cell at write time,
+    # so dryrun.json always matches what RooflineRecord.from_cell expects
+    rl_dict = RooflineRecord.from_dict(rl.as_dict()).to_dict()
     peak_bytes = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
                   + mem.output_size_in_bytes - mem.alias_size_in_bytes)
     rec = {
@@ -100,7 +104,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, tag: str = "baseline",
             "flops": float(cost.get("flops", 0.0)),
             "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
         },
-        "roofline": rl.as_dict(),
+        "roofline": rl_dict,
     }
     return rec
 

@@ -9,8 +9,17 @@ prompt KV is pushed through the fused quantize→pack pipeline
 (kernels/frac_pack/ops.py fake-quant), so decode reads exactly the
 fidelity a k-bit FRAC cell array would return while holding k/32 of the
 fp32 bytes.  ``stats.kv_bytes_full`` / ``stats.kv_bytes_frac`` record
-the modeled capacity win.  The SP-decode cache sharding (cache sequence
-dim over 'model') comes from sharding/rules.py when a mesh is provided.
+the modeled capacity win (byte math via the codec's single source of
+truth, ``kernels/frac_pack/ops.compressed_nbytes``).  The SP-decode
+cache sharding (cache sequence dim over 'model') comes from
+sharding/rules.py when a mesh is provided.
+
+Sustainability: every finished request is metered through a
+``SustainabilityMeter`` — its share of bucket wall time at facility
+power (J/token), chip occupancy, and the FRAC KV bytes' flash-tier
+residency charged through ``embodied.flash_tb(recycled=True)``.  Typed
+``EnergyReport``s land in ``engine.reports[rid]``;
+``engine.energy_report()`` is the cumulative account.
 """
 from __future__ import annotations
 
@@ -22,6 +31,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.ese.meter import MeterConfig, SustainabilityMeter
+from repro.core.ese.records import EnergyReport
 from repro.models import model
 from repro.models.common import greedy_sample
 
@@ -52,12 +63,15 @@ class ServeStats:
 class ServeEngine:
     def __init__(self, mcfg: ModelConfig, params, *, max_batch: int = 8,
                  eos_id: int | None = None,
-                 kv_frac_kbits: int | None = None):
+                 kv_frac_kbits: int | None = None,
+                 meter: SustainabilityMeter | None = None):
         self.mcfg = mcfg
         self.params = params
         self.max_batch = max_batch
         self.eos_id = eos_id
         self.kv_frac_kbits = kv_frac_kbits
+        self.meter = meter or SustainabilityMeter(MeterConfig(), name="serve")
+        self.reports: dict[int, EnergyReport] = {}
         self._queue: list[Request] = []
         self._next_rid = 0
         self.stats = ServeStats()
@@ -105,12 +119,14 @@ class ServeEngine:
             batch["enc_embeds"] = jnp.zeros(
                 (B, self.mcfg.encoder_seq, self.mcfg.d_model), jnp.bfloat16
             )
+        t_bucket0 = time.time()
+        bucket_kv_frac = 0
         logits, cache = self._prefill(self.params, batch)
         self.stats.prefills += 1
         # grow cache to S + max_new slots
         cache = self._grow_cache(cache, B, S, S + max_new)
         if self.kv_frac_kbits is not None:
-            cache = self._frac_cache(cache)
+            cache, bucket_kv_frac = self._frac_cache(cache)
         tok = greedy_sample(logits[:, -1])
         t_first = time.time()
         for r, t in zip(bucket, np.asarray(tok)):
@@ -133,32 +149,44 @@ class ServeEngine:
             if not alive.any():
                 break
         now = time.time()
+        bucket_dt = now - t_bucket0
+        total_toks = sum(len(r.output) for r in bucket) or 1
         for r in bucket:
             r.done = True
             r.t_done = now
             self.stats.tokens += len(r.output)
             self.stats.ttft_s.append(r.t_first - r.t_submit)
+            # sustainability: this request's token-share of the bucket's
+            # wall time, plus its slice of the FRAC KV flash residency
+            self.reports[r.rid] = self.meter.request(
+                len(r.output), bucket_dt * len(r.output) / total_toks,
+                rid=r.rid, kv_frac_bytes=bucket_kv_frac // B,
+                kv_occupancy_s=bucket_dt,
+            )
+
+    def energy_report(self) -> EnergyReport:
+        """Cumulative EnergyReport over everything served so far."""
+        return self.meter.report()
 
     def _frac_cache(self, cache):
         """Emulate a FRAC-stored KV cache: every float leaf goes through
         the fused quantize→dequantize pipeline at ``kv_frac_kbits``, so
         subsequent decode steps see exactly the fidelity the k-bit cell
-        array would return.  Books the modeled byte savings in stats."""
-        from repro.core.frac.codec import BLOCK
+        array would return.  Books the modeled byte savings in stats and
+        returns (cache, frac bytes booked for this bucket)."""
         from repro.kernels.frac_pack import ops as fops
 
         k = self.kv_frac_kbits
+        frac_bytes = 0
         for leaf in jax.tree.leaves(cache):
             if jnp.issubdtype(leaf.dtype, jnp.floating):
-                full = leaf.size * leaf.dtype.itemsize
-                self.stats.kv_bytes_full += full
-                # packed uint32 words (exact also for fractional k,
-                # e.g. the 11-bit cell-code dial) + one fp32 scale per
-                # quant block
-                n_blocks = -(-leaf.size // BLOCK)
-                self.stats.kv_bytes_frac += \
-                    (-(-(n_blocks * BLOCK * k) // 32)) * 4 + n_blocks * 4
-        return fops.fake_quant_tree(cache, k)
+                self.stats.kv_bytes_full += leaf.size * leaf.dtype.itemsize
+                # packed uint32 words + one fp32 scale per quant block;
+                # the codec owns this math (exact also for fractional k,
+                # e.g. the 11-bit cell-code dial)
+                frac_bytes += fops.compressed_nbytes(leaf.size, k)
+        self.stats.kv_bytes_frac += frac_bytes
+        return fops.fake_quant_tree(cache, k), frac_bytes
 
     def _grow_cache(self, cache, B: int, cur: int, target: int):
         """Pad prefill caches (built at prompt length) out to the decode

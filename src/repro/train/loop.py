@@ -12,7 +12,12 @@ Production behaviours, all exercised by tests/examples on CPU:
     zero-rollover semantics) next to the exact-checkpoint cadence;
   - straggler mitigation: per-step wall-time EWMA; steps slower than
     `straggler_z` sigmas raise a hook (re-balance / drop in multi-host;
-    logged + counted here).
+    logged + counted here);
+  - sustainability metering: a SustainabilityMeter books every executed
+    step (energy, carbon at the grid interval's intensity, chip embodied
+    share) and attributes the energy avoided by PAUSE/DERATE decisions
+    to the carbon-aware scheduler; per-step readings land in the metrics
+    log and the cumulative EnergyReport in the run result.
 """
 from __future__ import annotations
 
@@ -27,6 +32,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.ese.meter import MeterConfig, SustainabilityMeter
 from repro.data.pipeline import DataStream
 from repro.models import model
 from repro.train import grad_compress
@@ -51,6 +57,7 @@ class TrainerConfig:
     grad_compress_kbits: int = 16        # 16 = off; scheduler may lower it
     power_trace: np.ndarray | None = None    # supply fraction per step
     steps_per_power_interval: int = 1
+    meter: SustainabilityMeter | None = None  # default: flat-power meter
 
 
 class StragglerDetector:
@@ -93,6 +100,10 @@ class Trainer:
             if tcfg.snapshot_mode else None
         )
         self.straggler = StragglerDetector(tcfg.straggler_z)
+        self.meter = tcfg.meter or SustainabilityMeter(
+            MeterConfig(steps_per_interval=tcfg.steps_per_power_interval),
+            name="train",
+        )
         self._stop = False
         self.metrics: list[dict] = []
 
@@ -125,6 +136,7 @@ class Trainer:
         hooks = hooks or {}
         tcfg, mcfg = self.tcfg, self.mcfg
         params, opt, start = self.resume_or_init()
+        self.meter.seek(start)   # resumed runs read the same grid intervals
         stream = DataStream(mcfg, tcfg.global_batch, tcfg.seq_len,
                             start_step=start)
         kbits = tcfg.grad_compress_kbits
@@ -143,6 +155,7 @@ class Trainer:
                 decision = self._power_decision(step)
                 if decision is not None and decision.step_scale == 0.0:
                     paused_steps += 1
+                    self.meter.pause()
                     step += 1  # simulated time advances; no work, no data
                     continue
                 batch = next(stream)
@@ -158,8 +171,12 @@ class Trainer:
                 lagging = self.straggler.observe(dt)
                 if lagging and "on_straggler" in hooks:
                     hooks["on_straggler"](step, dt)
+                reading = self.meter.step(
+                    dt, decision=decision,
+                    tokens=tcfg.global_batch * tcfg.seq_len,
+                )
                 step += 1
-                self._log(step, loss, dt, lagging)
+                self._log(step, loss, dt, lagging, reading)
                 if step % tcfg.ckpt_every == 0 or step == tcfg.total_steps:
                     self._checkpoint(step, params, opt, stream.step)
                 if self.snapshot_mgr is not None:
@@ -181,6 +198,7 @@ class Trainer:
             "stragglers": self.straggler.flagged,
             "metrics": self.metrics,
             "params": params,
+            "energy_report": self.meter.report(),
         }
 
     # -- internals --------------------------------------------------------------
@@ -213,9 +231,12 @@ class Trainer:
     def _on_signal(self, signum, frame):
         self._stop = True
 
-    def _log(self, step, loss, dt, lagging):
+    def _log(self, step, loss, dt, lagging, reading=None):
         rec = {"step": step, "loss": loss, "step_time_s": dt,
                "straggler": bool(lagging)}
+        if reading is not None:
+            rec["energy_j"] = reading.total_j
+            rec["co2_kg"] = reading.co2_kg
         self.metrics.append(rec)
         if self.tcfg.log_path:
             with open(self.tcfg.log_path, "a") as f:

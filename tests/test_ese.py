@@ -3,6 +3,7 @@ import numpy as np
 import pytest
 
 from repro.core.ese import billing, embodied, energy, predictor
+from repro.core.ese.records import RooflineRecord
 from repro.core.power import traces
 
 
@@ -41,16 +42,30 @@ def test_quantiles_ordered(trained):
     assert frac > 0.85
 
 
+def _roofline(**kw) -> RooflineRecord:
+    base = dict(step_time_bound_s=1.0, t_compute_s=1.0, t_memory_s=0.5,
+                t_collective_s=0.1, flops_per_device=1e14,
+                hbm_bytes_per_device=5e11, collective_bytes_per_device=2e10,
+                chips=256)
+    base.update(kw)
+    return RooflineRecord(**base)
+
+
 def test_operational_energy_model():
-    rl = {"step_time_bound_s": 1.0, "t_compute_s": 1.0,
-          "t_memory_s": 0.5, "t_collective_s": 0.1}
-    se = energy.operational_step_energy(rl, chips=256)
+    se = energy.operational_step_energy(_roofline())
     from repro import hw
 
     assert hw.CHIP_IDLE_W < se.chip_w <= hw.CHIP_TDP_W
     # facility overheads: PUE and delivery loss are applied
     base = (se.chip_w + hw.HOST_OVERHEAD_W) * 256
     assert se.step_j == pytest.approx(base * 1.06 * hw.PUE, rel=1e-6)
+
+
+def test_operational_energy_rejects_raw_dicts():
+    rl = {"step_time_bound_s": 1.0, "t_compute_s": 1.0,
+          "t_memory_s": 0.5, "t_collective_s": 0.1}
+    with pytest.raises(TypeError, match="RooflineRecord"):
+        energy.operational_step_energy(rl, chips=256)
 
 
 def test_embodied_formula_verbatim():
@@ -71,6 +86,51 @@ def test_footprint_accumulates():
     assert fp.co2_kg() > 0
 
 
+def test_billing_edges_golden():
+    """Lock the carbon-aware tariff at the quantile extremes and both
+    recycled opt-in settings (1 kWh operational + 0.1 kWh embodied)."""
+    op, emb = 3.6e6, 3.6e5
+    cases = {
+        # (net_demand_quantile, recycled_optin) -> golden USD
+        (0.0, False): 0.206,      # no surge: 0.18 + 0.1·0.26
+        (0.0, True): 0.1969,      # green discount on the embodied rate
+        (1.0, False): 0.476,      # full 2.5x surge on operational
+        (1.0, True): 0.4669,
+    }
+    for (q, rec), usd in cases.items():
+        bill = billing.carbon_aware(op, emb, net_demand_quantile=q,
+                                    recycled_optin=rec)
+        assert bill.usd == pytest.approx(usd, rel=1e-9), (q, rec)
+        assert bill.breakdown["surge"] == pytest.approx(
+            1.0 if q == 0.0 else 2.5)
+    # derate opt-in stacks multiplicatively on the discounted bill
+    b = billing.carbon_aware(op, emb, net_demand_quantile=1.0,
+                             recycled_optin=True, derate_optin=True)
+    assert b.usd == pytest.approx(0.4669 * 0.8, rel=1e-9)
+    # out-of-range quantiles clip to the edges
+    lo = billing.carbon_aware(op, emb, net_demand_quantile=-3.0)
+    hi = billing.carbon_aware(op, emb, net_demand_quantile=7.0)
+    assert lo.usd == pytest.approx(0.206, rel=1e-9)
+    assert hi.usd == pytest.approx(0.476, rel=1e-9)
+
+
+def test_footprint_co2_split_golden():
+    """TaskFootprint CO2 operational/embodied split — golden numbers for
+    1e6 J operational + one chip-hour embodied."""
+    fp = embodied.TaskFootprint()
+    fp.charge(embodied.tpu_chip(), 3600.0, operational_j=1e6)
+    assert fp.embodied_j == pytest.approx(98173.51598173517, rel=1e-12)
+    split = fp.co2_split_kg()
+    assert split["operational"] == pytest.approx(0.06666666666666667)
+    assert split["embodied"] == pytest.approx(0.0065449010654490105)
+    assert fp.co2_kg() == pytest.approx(split["operational"]
+                                        + split["embodied"])
+    # embodied carbon may carry its own (manufacture-time) intensity
+    split2 = fp.co2_split_kg(embodied_kg_per_kwh=0.48)
+    assert split2["embodied"] == pytest.approx(2 * split["embodied"])
+    assert split2["operational"] == pytest.approx(split["operational"])
+
+
 def test_billing_incentives():
     op, emb = 3.6e6, 3.6e5       # 1 kWh op, 0.1 kWh embodied
     flat = billing.flat(op, emb)
@@ -88,12 +148,15 @@ def test_latency_head_on_synthetic_records():
     recs = []
     for i in range(40):
         t = float(rng.uniform(0.05, 5.0))
-        recs.append({"roofline": {
-            "t_compute_s": t, "t_memory_s": t * rng.uniform(0.3, 2.0),
-            "t_collective_s": t * rng.uniform(0.05, 0.8),
-            "flops_per_device": t * 1e14, "hbm_bytes_per_device": t * 5e11,
-            "collective_bytes_per_device": t * 2e10,
-            "step_time_bound_s": t,
-        }})
+        recs.append(_roofline(
+            t_compute_s=t, t_memory_s=t * rng.uniform(0.3, 2.0),
+            t_collective_s=t * rng.uniform(0.05, 0.8),
+            flops_per_device=t * 1e14, hbm_bytes_per_device=t * 5e11,
+            collective_bytes_per_device=t * 2e10,
+            step_time_bound_s=t,
+        ))
     params, norm, mape = energy.train_latency_head(recs, steps=500)
     assert mape < 0.25, f"learned latency head MAPE {mape}"
+    # un-converted dry-run cells are rejected with a pointer to the fix
+    with pytest.raises(TypeError, match="roofline_records"):
+        energy.train_latency_head([{"roofline": recs[0].to_dict()}])

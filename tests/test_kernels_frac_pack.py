@@ -237,3 +237,16 @@ def test_fused_pipeline_all_widths_1_to_16():
                 == np.asarray(ref["words"])).all(), k
         assert (np.asarray(fops.decode_tensor(blob, mode="jnp"))
                 == np.asarray(codec.frac_decode_tensor(ref))).all(), k
+
+
+def test_compressed_nbytes_single_source_of_truth():
+    """ops.compressed_nbytes predicts the real encoded size without
+    building a blob — the serving engine's KV-cache byte accounting
+    must agree with an actual encode, including at fractional k=11."""
+    rng = np.random.default_rng(3)
+    for k in (8, 11):
+        for n in (1, 255, 256, 257, 1000, 4096):
+            x = jnp.asarray(rng.normal(size=n), jnp.float32)
+            blob = codec.frac_encode_tensor(x, kbits=k)
+            assert fops.compressed_nbytes(n, k) \
+                == fops.compressed_bytes(blob), (k, n)

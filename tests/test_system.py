@@ -26,6 +26,12 @@ def test_full_lifecycle(tmp_path):
                          snapshot_mode="frac8")
     out = Trainer(mcfg, tcfg).run()
     assert out["final_step"] == 10 and np.isfinite(out["final_loss"])
+    # the trainer metered the run: per-step energy + cumulative report
+    from repro.core.ese.records import EnergyReport, validate_report_dict
+    assert isinstance(out["energy_report"], EnergyReport)
+    assert out["energy_report"].operational_j > 0
+    assert all(m["energy_j"] > 0 for m in out["metrics"])
+    validate_report_dict(out["energy_report"].to_json_dict())
 
     # serve from the trained params
     eng = ServeEngine(mcfg, out["params"], max_batch=2)
@@ -34,6 +40,13 @@ def test_full_lifecycle(tmp_path):
     res = eng.run()
     assert all(len(v) == 4 for v in res.values())
     assert eng.stats.prefills == 1     # same-length bucket batched
+    # per-request EnergyReports: J/token booked for both requests
+    assert set(eng.reports) == set(res)
+    for rep in eng.reports.values():
+        assert rep.detail["tokens"] == 4
+        assert rep.detail["j_per_token"] > 0
+    assert eng.energy_report().operational_j == pytest.approx(
+        sum(r.operational_j for r in eng.reports.values()))
 
 
 def test_serve_frac_kv_cache():
@@ -50,6 +63,10 @@ def test_serve_frac_kv_cache():
     assert eng.stats.kv_bytes_full > 0
     # 8-bit codes on bf16/fp32 KV + scales: at least ~1.9x smaller
     assert eng.stats.kv_bytes_frac < eng.stats.kv_bytes_full / 1.9
+    # the FRAC KV bytes were charged to the recycled flash tier and the
+    # per-request reports carry the kv share
+    assert "nand-tb" in eng.meter.footprint.by_unit
+    assert all(r.detail["kv_frac_bytes"] > 0 for r in eng.reports.values())
     # frac-cache tokens stay close to the full-precision engine's
     eng_full = ServeEngine(mcfg, params, max_batch=2)
     eng_full.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=4)
@@ -118,14 +135,23 @@ def test_ese_estimates_a_dryrun_record():
             "step_time_bound_s": 0.9, "chips": 256,
         },
     }
-    est = estimator.estimate_task(rec, n_steps=100, net_demand_quantile=0.2)
+    with pytest.warns(DeprecationWarning):   # legacy dict adapter
+        est = estimator.estimate_task(rec, n_steps=100,
+                                      net_demand_quantile=0.2)
     assert est.latency_s == pytest.approx(90.0)
     assert est.operational_j > 0 and est.embodied_j > 0
     assert est.bill_usd > 0
     # recycled opt-in lowers the bill
-    est_r = estimator.estimate_task(rec, n_steps=100, net_demand_quantile=0.2,
-                                    recycled_optin=True)
+    with pytest.warns(DeprecationWarning):
+        est_r = estimator.estimate_task(rec, n_steps=100,
+                                        net_demand_quantile=0.2,
+                                        recycled_optin=True)
     assert est_r.bill_usd < est.bill_usd
+    # the typed front door agrees with the adapter
+    from repro.core.ese import RooflineRecord, TaskSpec, estimate
+    typed = estimate(RooflineRecord.from_cell(rec),
+                     TaskSpec(n_steps=100, net_demand_quantile=0.2))
+    assert typed.bill_usd == pytest.approx(est.bill_usd)
 
 
 def test_shapes_registry_complete():

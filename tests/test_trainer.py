@@ -48,6 +48,48 @@ def test_power_pause_skips_steps(tmp_path):
     assert out["final_step"] == 8
 
 
+def test_trainer_emits_energy_reports(tmp_path):
+    """The loop meters every executed step and attributes the paused
+    intervals' avoided energy to the carbon-aware scheduler."""
+    from repro.core.ese.records import EnergyReport, validate_report_dict
+
+    mcfg = get_tiny(ARCH)
+    trace = np.array([1.0, 1.0, 0.0, 0.0, 1.0, 0.5, 1.0, 1.0])
+    tcfg = _tcfg(tmp_path, power_trace=trace, steps_per_power_interval=1)
+    sch = CarbonAwareScheduler(SchedulerConfig(use_forecast=False))
+    tr = Trainer(mcfg, tcfg, scheduler=sch)
+    out = tr.run()
+
+    rep = out["energy_report"]
+    assert isinstance(rep, EnergyReport)
+    validate_report_dict(rep.to_json_dict())
+    # 6 executed steps (one derated at supply 0.5), 2 paused
+    sched = rep.detail["scheduler"]
+    assert sched["paused_steps"] == 2
+    assert sched["derated_steps"] == 1
+    assert sched["avoided_pause_j"] > 0 and sched["avoided_derate_j"] > 0
+    assert rep.operational_j > 0 and rep.embodied_j > 0 and rep.co2_kg > 0
+    # per-step readings ride in the metrics log
+    executed = [m for m in out["metrics"]]
+    assert len(executed) == 6
+    assert all(m["energy_j"] > 0 and m["co2_kg"] > 0 for m in executed)
+    # cumulative operational energy == sum of the per-step readings'
+    # operational shares (embodied rides on top)
+    assert rep.operational_j <= sum(m["energy_j"] for m in executed)
+
+
+def test_trainer_accepts_custom_meter(tmp_path):
+    from repro.core.ese.meter import MeterConfig, SustainabilityMeter
+
+    mcfg = get_tiny(ARCH)
+    meter = SustainabilityMeter(MeterConfig(chips=8, flat_w=300.0),
+                                name="my-job")
+    out = Trainer(mcfg, _tcfg(tmp_path, total_steps=2, meter=meter)).run()
+    rep = out["energy_report"]
+    assert rep.task.name == "my-job"
+    assert meter.totals.steps == 2
+
+
 def test_nonvolatile_snapshots_written(tmp_path):
     mcfg = get_tiny(ARCH)
     tcfg = _tcfg(tmp_path, snapshot_mode="frac8", total_steps=4)
