@@ -1,0 +1,149 @@
+"""Serving decode throughput: device-resident while_loop vs the seed
+per-token-sync engine.
+
+The seed ``ServeEngine`` advanced one token per Python-loop iteration —
+a jitted ``decode_step`` dispatch plus an ``np.asarray(tok)`` host sync
+per token.  The rebuilt engine (serve/engine.py) carries tokens /
+positions / alive mask / output buffer on device through one jitted
+``lax.while_loop`` and syncs once per bucket.  These rows time the
+*decode phase only* (identical params, identical post-prefill grown
+cache, no EOS, ``DECODE_STEPS`` steps) so the ratio isolates the
+per-token dispatch+sync overhead — operational J/token is proportional
+to wall time at facility power, so tokens/s IS the sustainability
+number for serving (Chasing Carbon: serving efficiency dominates).
+
+Min-of-N like bench_frac: the ratio divides two timings, and min
+recovers each path's steady-state cost on a noisy runner.
+
+``SERVE_BENCH_QUICK=1`` trims to one arch / fewer repeats for CI smoke.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_tiny
+from repro.models import model
+from repro.models.common import greedy_sample
+from repro.serve.engine import ServeEngine, build_decode_loop, grow_cache
+
+B = 4
+PROMPT_LEN = 16
+DECODE_STEPS = 32           # acceptance floor measures decode length >= 32
+
+
+def _quick() -> bool:
+    return bool(os.environ.get("SERVE_BENCH_QUICK"))
+
+
+def _prep(mcfg, params):
+    """Shared starting state: prefill + grown cache + first token."""
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, mcfg.vocab_size, (B, PROMPT_LEN)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks)}
+    logits, cache = jax.jit(
+        lambda p, b: model.prefill(mcfg, p, b))(params, batch)
+    cache = grow_cache(mcfg, cache, B, PROMPT_LEN + DECODE_STEPS + 1)
+    tok0 = greedy_sample(logits[:, -1])
+    jax.block_until_ready((tok0, cache))
+    return tok0, cache
+
+
+def _copy(cache):
+    c = jax.tree.map(jnp.copy, cache)
+    jax.block_until_ready(c)
+    return c
+
+
+def _min_of(fn, repeats):
+    ts = []
+    for _ in range(repeats):
+        ts.append(fn())
+    return min(ts)
+
+
+def bench_decode_throughput() -> list[tuple]:
+    rows = []
+    archs = ("llama3.2-3b",) if _quick() \
+        else ("llama3.2-3b", "mixtral-8x7b", "rwkv6-1.6b")
+    repeats = 3 if _quick() else 5
+    backend = jax.default_backend()
+    for arch in archs:
+        mcfg = get_tiny(arch)
+        params = model.init_params(mcfg, jax.random.PRNGKey(0))
+        tok0, cache0 = _prep(mcfg, params)
+
+        # --- seed path: one jitted step + host sync per token ---------
+        seed_step = jax.jit(
+            lambda p, c, t, pos: model.decode_step(mcfg, p, c, t, pos),
+            donate_argnums=(1,))
+
+        def run_seed(cache):
+            t0 = time.perf_counter()
+            tok = tok0
+            for i in range(DECODE_STEPS):
+                logits, cache = seed_step(params, cache, tok,
+                                          jnp.int32(PROMPT_LEN + i))
+                tok = greedy_sample(logits)
+                np.asarray(tok)          # the seed engine's per-token sync
+            return time.perf_counter() - t0
+
+        # --- fused path: one while_loop, one device_get ---------------
+        loop = build_decode_loop(mcfg, out_cap=DECODE_STEPS + 1)
+        pos0 = jnp.full((B,), PROMPT_LEN, jnp.int32)
+        mn = jnp.full((B,), DECODE_STEPS + 1, jnp.int32)
+
+        def run_fused(cache):
+            t0 = time.perf_counter()
+            out, n_out, steps, _ = loop(params, cache, tok0, pos0, mn)
+            jax.device_get((out, n_out, steps))
+            return time.perf_counter() - t0
+
+        run_seed(_copy(cache0))          # warm both jit caches
+        run_fused(_copy(cache0))
+        dt_seed = _min_of(lambda: run_seed(_copy(cache0)), repeats)
+        dt_fused = _min_of(lambda: run_fused(_copy(cache0)), repeats)
+        toks = B * DECODE_STEPS
+        rows.append((f"serve_decode_seed_{arch}", toks / dt_seed,
+                     f"toks_per_s B={B} steps={DECODE_STEPS} "
+                     f"per-token-sync ({backend})"))
+        rows.append((f"serve_decode_fused_{arch}", toks / dt_fused,
+                     f"toks_per_s device-resident while_loop ({backend})"))
+        rows.append((f"serve_decode_speedup_{arch}", dt_seed / dt_fused,
+                     "x_fused_over_seed min-of-N"))
+    return rows
+
+
+def bench_engine_jpt() -> list[tuple]:
+    """End-to-end engine run (mixed-length bucket where supported):
+    J/token from the SustainabilityMeter — the number the paper's
+    serving story optimizes."""
+    rows = []
+    archs = ("llama3.2-3b",) if _quick() else ("llama3.2-3b", "rwkv6-1.6b")
+    for arch in archs:
+        mcfg = get_tiny(arch)
+        params = model.init_params(mcfg, jax.random.PRNGKey(0))
+        eng = ServeEngine(mcfg, params, max_batch=B, kv_frac_kbits=8)
+        rng = np.random.default_rng(0)
+        for i in range(B):
+            plen = PROMPT_LEN - 2 * (i % 2)      # ragged bucket
+            eng.submit(rng.integers(1, mcfg.vocab_size, plen).astype(np.int32),
+                       max_new_tokens=DECODE_STEPS)
+        eng.run()
+        rep = eng.energy_report()
+        jpt = rep.operational_j / max(rep.detail["tokens"], 1)
+        rows.append((f"serve_jpt_{arch}", jpt,
+                     f"j_per_token tokens={rep.detail['tokens']} "
+                     f"buckets={eng.stats.prefills} frac_kv_k8"))
+    return rows
+
+
+def run() -> list[tuple]:
+    out = []
+    for fn in (bench_decode_throughput, bench_engine_jpt):
+        out.extend(fn())
+    return out

@@ -8,6 +8,8 @@ Prints ``name,value,derived`` CSV rows.  Mapping to the paper:
   bench_kernels          §II-A NTT / SHA3 workloads
   bench_roofline         EXPERIMENTS §Roofline table (from the dry-run)
   bench_ese_estimates    Fig 4(a) estimator pipeline end-to-end
+  bench_serve            serving decode tokens/s + J/token (device-
+                         resident while_loop vs seed per-token sync)
 
 Usage:
   python benchmarks/run.py [--sections frac,kernels] [--json [DIR]]
@@ -42,6 +44,7 @@ def main(argv: list[str] | None = None) -> None:
         bench_kernels,
         bench_progress_carbon,
         bench_roofline,
+        bench_serve,
     )
 
     modules = [
@@ -51,6 +54,7 @@ def main(argv: list[str] | None = None) -> None:
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),
         ("ese_estimates", bench_ese_estimates),
+        ("serve", bench_serve),
     ]
     if args.sections:
         wanted = {s.strip() for s in args.sections.split(",") if s.strip()}

@@ -1,4 +1,5 @@
-"""Batched serving with KV caches + FRAC-tier storage demo.
+"""Continuous-batched serving with ragged buckets, device-resident
+decode and FRAC KV-tier storage — J/token from the live meter.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -20,19 +21,28 @@ def main():
     for arch in ("llama3.2-3b", "mixtral-8x7b", "rwkv6-1.6b"):
         mcfg = get_tiny(arch)
         params = model.init_params(mcfg, jax.random.PRNGKey(0))
-        eng = ServeEngine(mcfg, params, max_batch=4)
+        eng = ServeEngine(mcfg, params, max_batch=4, kv_frac_kbits=8)
         rng = np.random.default_rng(0)
+        # mixed prompt lengths: ragged-capable families (llama, rwkv)
+        # serve them in right-padded mixed-length buckets; rolling-window
+        # archs (mixtral) fall back to exact-length grouping
         for i in range(6):
-            plen = 8 if i < 4 else 12            # two length buckets
+            plen = (8, 12, 10, 8, 12, 10)[i]
             eng.submit(rng.integers(1, mcfg.vocab_size, plen).astype(np.int32),
                        max_new_tokens=8)
         t0 = time.time()
         out = eng.run()
         dt = time.time() - t0
+        rep = eng.energy_report()
+        jpt = rep.operational_j / max(eng.stats.tokens, 1)
         print(f"{arch:24s} requests={eng.stats.requests} "
               f"prefills={eng.stats.prefills} "
               f"decode_steps={eng.stats.decode_steps} "
-              f"tokens={eng.stats.tokens} wall={dt:.1f}s")
+              f"tokens={eng.stats.tokens} host_syncs={eng.stats.host_syncs} "
+              f"wall={dt:.1f}s J/token={jpt:.3f} "
+              f"ragged={'yes' if model.supports_ragged(mcfg) else 'no'}")
+        print(f"  kv bytes full={eng.stats.kv_bytes_full} "
+              f"frac={eng.stats.kv_bytes_frac}")
         first = out[0]
         print(f"  sample output: {first}")
 

@@ -281,6 +281,33 @@ def fake_quant_tree(tree: Any, kbits: int) -> Any:
     return jax.tree.map(one, tree)
 
 
+def fake_quant_slots(x: jax.Array, kbits: int, *, row_dims: int = 1
+                     ) -> jax.Array:
+    """Row-granular fake-quant: one symmetric absmax scale per row,
+    where a row is the trailing ``row_dims`` axes flattened — the FRAC
+    slot write unit (one token's (K, hd) KV per layer per sequence).
+
+    Same arithmetic as ``codec.quantize_blocks``/``dequantize_blocks``
+    with the scale block equal to the row, written as plain jnp so it
+    traces inside jitted decode loops (serve/engine.py decodes with
+    this applied to every cache write).  Row-confined scales mean a
+    sequence's quantized cache never depends on which bucket neighbours
+    it was batched with — batched serving stays bit-identical to solo
+    serving.  The modeled byte cost stays ``compressed_nbytes`` on the
+    leaf (the codec's canonical block geometry over the packed stream).
+    """
+    assert 1 <= row_dims < x.ndim or x.ndim == row_dims == 1
+    q = (1 << kbits) - 1
+    lead = x.shape[: x.ndim - row_dims]
+    xf = x.reshape(*lead, -1).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) + 1e-12
+    t = jnp.round((xf / scale + 1.0) * 0.5 * q)
+    codes = jnp.clip(t, 0, q)
+    inv_q = float(np.float32(1.0) / np.float32(q))
+    out = (codes * 2.0 - q) * (scale * inv_q)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
 # ---------------------------------------------------------------------------
 # raw code <-> word helpers (the compressed_allreduce wire payload;
 # shard_map-safe pure functions)

@@ -1,8 +1,12 @@
-"""Serving launcher: batched requests against a checkpoint (or random
-init for shape testing).
+"""Serving launcher: continuous-batched requests against a checkpoint
+(or random init for shape testing).
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \
-        [--ckpt /tmp/run1] --requests 8 --max-new 16
+        [--ckpt /tmp/run1] --requests 8 --max-new 16 [--mixed-lengths]
+
+``--mixed-lengths`` submits a spread of prompt lengths; families that
+support ragged buckets (model.supports_ragged) then serve them through
+one right-padded prefill per bucket instead of one bucket per length.
 """
 from __future__ import annotations
 
@@ -23,6 +27,11 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--mixed-lengths", action="store_true",
+                    help="spread prompt lengths across requests "
+                         "(exercises ragged buckets where supported)")
+    ap.add_argument("--kv-frac-kbits", type=int, default=None,
+                    help="FRAC-quantize the KV cache at this bit width")
     args = ap.parse_args()
 
     mcfg = get_tiny(args.arch)
@@ -36,18 +45,32 @@ def main() -> None:
     else:
         params = model.init_params(mcfg, jax.random.PRNGKey(0))
 
-    eng = ServeEngine(mcfg, params, max_batch=8)
+    eng = ServeEngine(mcfg, params, max_batch=8,
+                      kv_frac_kbits=args.kv_frac_kbits)
     rng = np.random.default_rng(0)
-    for _ in range(args.requests):
-        eng.submit(rng.integers(1, mcfg.vocab_size,
-                                args.prompt_len).astype(np.int32),
+    for i in range(args.requests):
+        plen = args.prompt_len
+        if args.mixed_lengths:
+            plen = max(2, args.prompt_len - (i % 4) * 2)
+        eng.submit(rng.integers(1, mcfg.vocab_size, plen).astype(np.int32),
                    max_new_tokens=args.max_new)
     out = eng.run()
     for rid, toks in out.items():
         print(f"req {rid}: {toks}")
     s = eng.stats
+    rep = eng.energy_report()
+    wall = sum(r.latency_s for r in eng.reports.values())
+    tps = s.tokens / wall if wall else float("inf")
+    ttft = 1e3 * float(np.mean(s.ttft_s)) if s.ttft_s else 0.0
     print(f"requests={s.requests} prefills={s.prefills} "
-          f"decode_steps={s.decode_steps} tokens={s.tokens}")
+          f"decode_steps={s.decode_steps} tokens={s.tokens} "
+          f"host_syncs={s.host_syncs}")
+    print(f"tokens/s={tps:.1f} mean_ttft_ms={ttft:.1f} "
+          f"J/token={rep.operational_j / max(s.tokens, 1):.3f} "
+          f"ragged={'yes' if model.supports_ragged(mcfg) else 'no'}")
+    if s.kv_bytes_frac:
+        print(f"kv_bytes: full={s.kv_bytes_full} frac={s.kv_bytes_frac} "
+              f"({s.kv_bytes_full / s.kv_bytes_frac:.2f}x)")
 
 
 if __name__ == "__main__":

@@ -143,14 +143,17 @@ def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
 
 
 def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
-    """x: (..., S, nheads, head_dim); positions: (S,) possibly traced."""
+    """x: (..., S, nheads, head_dim); positions: (S,) possibly traced, or
+    (B, S) when each batch row sits at its own absolute position (ragged
+    serving buckets — see serve/engine.py)."""
     if theta <= 0:
         return x
     hd = x.shape[-1]
     freqs = rope_frequencies(hd, theta)                    # (hd/2,)
-    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # (S, hd/2)
-    cos = jnp.cos(ang)[:, None, :]                         # (S, 1, hd/2)
-    sin = jnp.sin(ang)[:, None, :]
+    # (S, hd/2) — or (B, S, hd/2) for per-sequence positions
+    ang = positions.astype(jnp.float32)[..., :, None] * freqs[None, :]
+    cos = jnp.cos(ang)[..., :, None, :]                    # (S, 1, hd/2)
+    sin = jnp.sin(ang)[..., :, None, :]
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
     return out.astype(x.dtype)
@@ -204,6 +207,11 @@ def attention(
     ``chunk`` divides Sq — keeps the (chunk, Sk) score block transient so
     32k prefill fits.  The Pallas SWA kernel replaces this on the hot
     path (kernels/swa_attention) — this is the oracle.
+
+    ``kv_valid_len`` / ``q_positions`` may carry a leading batch dim
+    ((B,) / (B, Sq)): each sequence then masks its own cache span — the
+    ragged-bucket decode path, where per-sequence positions differ.
+    Batched positions are only supported unchunked (decode has Sq = 1).
     """
     B, Sq, H, hd = q.shape
     K = k.shape[2]
@@ -213,6 +221,8 @@ def attention(
     kv_pos = jnp.arange(k.shape[1])
     if q_positions is None:
         q_positions = jnp.arange(Sq)
+    batched_mask = (q_positions.ndim > 1
+                    or (kv_valid_len is not None and kv_valid_len.ndim > 0))
 
     def block(q_blk, q_pos_blk):
         if scores_bf16:
@@ -222,15 +232,25 @@ def attention(
                                 preferred_element_type=jnp.bfloat16)
         else:
             scores = _gqa_scores(q_blk, k)                   # (B,K,G,sq,Sk)
+        # (sq, Sk) shared mask, or (B, sq, Sk) when positions/valid
+        # lengths are per-sequence
         mask = jnp.ones((q_blk.shape[1], k.shape[1]), bool)
         if causal:
-            mask &= kv_pos[None, :] <= q_pos_blk[:, None]
+            mask &= kv_pos[None, :] <= q_pos_blk[..., :, None]
         if window:
-            mask &= kv_pos[None, :] > (q_pos_blk[:, None] - window)
+            mask &= kv_pos[None, :] > (q_pos_blk[..., :, None] - window)
         if kv_valid_len is not None:
-            mask &= (kv_pos < kv_valid_len)[None, :]
-        return _softmax_attend(scores, mask[None, None, None], v)
+            vl = jnp.asarray(kv_valid_len)
+            if vl.ndim > 0:                                  # (B,) per-seq
+                mask = mask & (kv_pos[None, None, :] < vl[:, None, None])
+            else:
+                mask &= (kv_pos < vl)[None, :]
+        mask_b = mask[:, None, None] if mask.ndim == 3 else mask[None, None, None]
+        return _softmax_attend(scores, mask_b, v)
 
+    if batched_mask:
+        assert not (chunk and Sq > chunk), \
+            "per-sequence positions are decode-only (unchunked)"
     if chunk and Sq > chunk and Sq % chunk == 0:
         n = Sq // chunk
         # checkpoint the chunk: without it the backward saves per-chunk

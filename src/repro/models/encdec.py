@@ -121,8 +121,12 @@ def forward(cfg: ModelConfig, params, batch) -> jax.Array:
     return jnp.einsum("bsd,vd->bsv", x, params["embed"])
 
 
-def prefill(cfg: ModelConfig, params, batch):
-    """Encoder pass + decoder prefill; emits self + cross KV caches."""
+def prefill(cfg: ModelConfig, params, batch, lengths=None):
+    """Encoder pass + decoder prefill; emits self + cross KV caches.
+
+    Ragged buckets are not supported here (the serve engine groups
+    audio requests by exact prompt length — model.supports_ragged)."""
+    assert lengths is None, "encdec prefill serves exact-length buckets only"
     enc_out = encode(cfg, params, batch["enc_embeds"])
     tokens = batch["tokens"]
     B, S = tokens.shape
@@ -150,8 +154,10 @@ def prefill(cfg: ModelConfig, params, batch):
     return logits, cache
 
 
-def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
-    """tokens: (B,); cache: {sk, sv (L,B,Sc,H,hd), ck, cv (L,B,T,H,hd)}."""
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos, kv_kbits=None):
+    """tokens: (B,); cache: {sk, sv (L,B,Sc,H,hd), ck, cv (L,B,T,H,hd)}.
+    ``kv_kbits`` FRAC-fake-quantizes the decode-written self-attn KV
+    slot as it is produced (cross-attn KV is prefill-only)."""
     B = tokens.shape[0]
     pe = sinusoidal_positions(1, cfg.d_model, offset=pos)
     x = (params["embed"][tokens] + pe.astype(jnp.bfloat16))[:, None, :]
@@ -162,6 +168,11 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
         q = jnp.einsum("bsd,dhk->bshk", h, bp["self_attn"]["wq"])
         k = jnp.einsum("bsd,dhk->bshk", h, bp["self_attn"]["wk"])
         v = jnp.einsum("bsd,dhk->bshk", h, bp["self_attn"]["wv"])
+        if kv_kbits is not None:
+            from repro.kernels.frac_pack import ops as fops
+
+            k = fops.fake_quant_slots(k, kv_kbits, row_dims=2)
+            v = fops.fake_quant_slots(v, kv_kbits, row_dims=2)
         sk = lax.dynamic_update_slice_in_dim(bc["sk"], k, pos, axis=1)
         sv = lax.dynamic_update_slice_in_dim(bc["sv"], v, pos, axis=1)
         out = attention(

@@ -87,12 +87,42 @@ def loss_fn(cfg: ModelConfig, params, batch) -> jax.Array:
     return cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
 
 
-def prefill(cfg: ModelConfig, params, batch):
-    return _mod(cfg).prefill(cfg, params, batch)
+def prefill(cfg: ModelConfig, params, batch, lengths=None):
+    """Forward + cache emit.  ``lengths`` (B,) int32 serves a ragged
+    right-padded bucket (mixed prompt lengths sharing one prefill); the
+    returned logits are then each sequence's own last real token.  Only
+    valid when :func:`supports_ragged`."""
+    return _mod(cfg).prefill(cfg, params, batch, lengths=lengths)
 
 
-def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
-    return _mod(cfg).decode_step(cfg, params, cache, tokens, pos)
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
+                kv_kbits: int | None = None):
+    """One decode step.  ``pos`` is a scalar, or (B,) per-sequence
+    positions for a ragged bucket (attention families).  ``kv_kbits``
+    fake-quantizes decode-written KV slots through the FRAC pipeline as
+    they are produced (no-op for state-space caches, which are rewritten
+    in place rather than appended)."""
+    return _mod(cfg).decode_step(cfg, params, cache, tokens, pos, kv_kbits)
+
+
+def supports_ragged(cfg: ModelConfig) -> bool:
+    """Whether mixed-length (right-padded) buckets serve with outputs
+    bit-identical to solo serving.
+
+    True for pure-attention dense stacks with a full-length cache
+    (per-sequence valid masks hide pad slots) and for rwkv (prefill
+    freezes each lane's state at its own length).  False for rolling
+    (SWA) caches — the window emit is slot-aligned across the batch —
+    for hybrid/audio, whose mamba / encoder state emit has no per-lane
+    length masking, and for MoE: prefill routes with per-expert
+    capacity shared across the whole group, so pad tokens and bucket
+    neighbours can change which tokens drop (decode is dropless via
+    moe_block_decode, but prefill still couples lanes)."""
+    if cfg.family == "ssm":
+        return True
+    if cfg.family in ("audio", "hybrid") or cfg.is_moe:
+        return False
+    return cfg.max_decode_window == 0
 
 
 # -- caches ----------------------------------------------------------------------

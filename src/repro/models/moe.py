@@ -78,6 +78,50 @@ def moe_block(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
     return out.reshape(B, S, D)
 
 
+def moe_block_decode(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    """Decode-specialized MoE: dense all-expert compute + top-k combine.
+    x: (B, 1, D) -> (B, 1, D).
+
+    The grouped capacity/dispatch machinery above exists for large
+    training/prefill groups under SPMD; inside the serving engine's
+    per-token ``while_loop`` it is pure op-count overhead (top-k,
+    cumsums, two one-hots and the (g, s, k, E, C) slot tensors per MoE
+    layer per token).  At decode the expert weights dominate memory
+    traffic and the grouped einsums read all E experts' weights anyway,
+    so computing every expert densely and combining with the top-k gates
+    costs the same HBM bytes while collapsing the bookkeeping.  It is
+    also *dropless* and per-token independent — no shared capacity
+    state — so batched decode is bit-identical to decoding each
+    sequence alone (the serving engine's ragged-parity invariant).
+    """
+    E, k = cfg.num_experts, cfg.experts_per_token
+    D, F = cfg.d_model, cfg.d_ff
+    # fp32 flat matmuls: XLA CPU scalar-emulates bf16 dots (measured 2x
+    # on the tiny cell), and the (D, E·F) weight reshapes/casts are
+    # loop-invariant — hoisted out of the serving while_loop.
+    xf = x.astype(jnp.float32).reshape(-1, D)               # (N, D)
+    logits = xf @ p["router"].astype(jnp.float32)           # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                     # (N, k)
+    gate = gate / (gate.sum(-1, keepdims=True) + 1e-9)
+    combine = jnp.einsum(
+        "nk,nke->ne", gate, jax.nn.one_hot(idx, E, dtype=jnp.float32)
+    )
+    wu = jnp.transpose(p["w_up"], (1, 0, 2)).reshape(D, E * F)
+    up = xf @ wu.astype(jnp.float32)                        # (N, E·F)
+    if cfg.gated_mlp:
+        wg = jnp.transpose(p["w_gate"], (1, 0, 2)).reshape(D, E * F)
+        h = activate(xf @ wg.astype(jnp.float32), cfg.mlp_activation) * up
+    else:
+        h = activate(up, cfg.mlp_activation)
+    # gate before the down-projection so unselected experts contribute
+    # exact zeros; (E, N, F) x (E, F, D) batched matmul, summed over E
+    hw = h.reshape(-1, E, F) * combine[:, :, None]
+    ye = jnp.matmul(hw.transpose(1, 0, 2),
+                    p["w_down"].astype(jnp.float32))        # (E, N, D)
+    return ye.sum(axis=0).astype(x.dtype).reshape(x.shape)
+
+
 def moe_flops_per_token(cfg: ModelConfig) -> int:
     """Active-path matmul FLOPs per token for one MoE block (fwd)."""
     n_mats = 3 if cfg.gated_mlp else 2

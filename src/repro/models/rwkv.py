@@ -174,8 +174,14 @@ def forward(cfg: ModelConfig, params, batch) -> jax.Array:
     return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
 
 
-def prefill(cfg: ModelConfig, params, batch):
-    """Returns (last-token logits, per-layer decode state)."""
+def prefill(cfg: ModelConfig, params, batch, lengths=None):
+    """Returns (last-token logits, per-layer decode state).
+
+    ``lengths`` (B,) serves a ragged right-padded bucket: the recurrent
+    state freezes once a sequence's real tokens run out (pad tokens
+    never touch it), so each lane's decode state — and its last-real-
+    token logits (index ``lengths - 1``) — are bit-identical to running
+    that prompt alone."""
     from repro.models.common import rms_norm
 
     x = params["embed"][batch["tokens"]]
@@ -185,18 +191,31 @@ def prefill(cfg: ModelConfig, params, batch):
         state0 = init_rwkv_state(cfg, B)
 
         def step(st, t):
-            out, st = rwkv_layer_step(x[:, t], st, lp, cfg, lp["ln1"], lp["ln2"])
-            return st, out
+            out, st_new = rwkv_layer_step(x[:, t], st, lp, cfg,
+                                          lp["ln1"], lp["ln2"])
+            if lengths is not None:
+                upd = t < lengths                            # (B,)
+                st_new = jax.tree.map(
+                    lambda n, o: jnp.where(
+                        upd.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+                    st_new, st)
+            return st_new, out
 
         stN, ys = lax.scan(step, state0, jnp.arange(S))
         return jnp.moveaxis(ys, 0, 1), stN
 
     x, cache = _scan_layers(cfg, params, x, body)
+    if lengths is None:
+        x = x[:, -1:]
+    else:
+        # pad-region activations are garbage but frozen states aren't;
+        # gather each lane's own last real position
+        x = jnp.take_along_axis(x, (lengths - 1)[:, None, None], axis=1)
     x = rms_norm(x, params["final_norm"])
-    return jnp.einsum("bsd,dv->bsv", x[:, -1:], params["lm_head"]), cache
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"]), cache
 
 
-def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos, kv_kbits=None):
     from repro.models.common import rms_norm
 
     x = params["embed"][tokens]                             # (B, D)

@@ -172,19 +172,46 @@ def _attn_seq(x, ap, cfg: ModelConfig, *, causal=True, emit_cache=False):
     return out
 
 
-def _attn_decode(x, ap, cfg: ModelConfig, cache, pos):
-    """One-token attention against the cache.  x: (B, 1, D)."""
+def _attn_decode(x, ap, cfg: ModelConfig, cache, pos, kv_kbits=None):
+    """One-token attention against the cache.  x: (B, 1, D).
+
+    ``pos`` is a scalar (uniform bucket) or a (B,) vector (ragged
+    bucket: each sequence sits at its own absolute position, writes its
+    own cache slot, and masks its own valid span).  ``kv_kbits``
+    fake-quantizes the newly written KV slot through the FRAC pipeline
+    *inside* the decode loop — decode-written cache rows then carry
+    exactly the fidelity a k-bit cell array would return, same as the
+    prefill rows (serve/engine.py's FRAC KV tier).
+    """
     q = jnp.einsum("bsd,dhk->bshk", x, ap["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, ap["wk"])
     v = jnp.einsum("bsd,dhk->bshk", x, ap["wv"])
-    ppos = jnp.full((1,), pos)
+    pos = jnp.asarray(pos)
+    ragged = pos.ndim > 0
+    ppos = pos[:, None] if ragged else jnp.full((1,), pos)  # (B,1) | (1,)
     q = apply_rope(q, ppos, cfg.rope_theta)
     k = apply_rope(k, ppos, cfg.rope_theta)
+    if kv_kbits is not None:
+        from repro.kernels.frac_pack import ops as fops
+
+        # slot-granular (one scale per sequence's (K, hd) row): a lane's
+        # quantization never depends on its bucket neighbours, so ragged
+        # batched serving stays bit-identical to solo serving
+        k = fops.fake_quant_slots(k, kv_kbits, row_dims=2)
+        v = fops.fake_quant_slots(v, kv_kbits, row_dims=2)
     S_cache = cache["k"].shape[1]
     slot = pos % S_cache if cfg.max_decode_window else jnp.minimum(pos, S_cache - 1)
-    ck = lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
-    cv = lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
-    valid = jnp.minimum(pos + 1, S_cache)
+    if ragged:
+        # per-sequence slot write: vmapped DUS lowers to an in-place
+        # scatter, keeping the append O(1) in cache length
+        upd = jax.vmap(
+            lambda c, u, s: lax.dynamic_update_slice_in_dim(c, u, s, axis=0))
+        ck = upd(cache["k"], k, slot)
+        cv = upd(cache["v"], v, slot)
+    else:
+        ck = lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+        cv = lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    valid = jnp.minimum(pos + 1, S_cache)                # (B,) when ragged
     out = attention(
         q, ck, cv, causal=False, kv_valid_len=valid, q_positions=ppos
     )
@@ -201,10 +228,14 @@ def _mlp(x, mp, cfg: ModelConfig):
     return h @ mp["w_down"]
 
 
-def _mix_mlp(x, bp, j, mlp_kind, cfg):
-    from repro.models.moe import moe_block
+def _mix_mlp(x, bp, j, mlp_kind, cfg, decode=False):
+    from repro.models.moe import moe_block, moe_block_decode
 
     if mlp_kind == "moe":
+        if decode:
+            # dropless dense-combine path: same weights read, no
+            # capacity bookkeeping in the decode loop (see moe.py)
+            return moe_block_decode(x, bp[f"moe_{j}"], cfg)
         return moe_block(x, bp[f"moe_{j}"], cfg)
     return _mlp(x, bp[f"mlp_{j}"], cfg)
 
@@ -268,14 +299,15 @@ def mamba_prefill_state(h, mp, cfg: ModelConfig):
     return {"conv": conv_win, "ssm": hN}
 
 
-def block_decode(x, bp, bc, cfg: ModelConfig, pos):
+def block_decode(x, bp, bc, cfg: ModelConfig, pos, kv_kbits=None):
     """One token through one period block.  x: (B, 1, D)."""
     new_cache: dict[str, Any] = {}
     for j, (mixer, mlp_kind) in enumerate(sublayer_kinds(cfg)):
         h = rms_norm(x, bp[f"norm1_{j}"])
         if mixer == "attn":
             mixed, c = _attn_decode(
-                h, bp[f"attn_{j}"], cfg, {"k": bc[f"k_{j}"], "v": bc[f"v_{j}"]}, pos
+                h, bp[f"attn_{j}"], cfg, {"k": bc[f"k_{j}"], "v": bc[f"v_{j}"]},
+                pos, kv_kbits,
             )
             new_cache[f"k_{j}"], new_cache[f"v_{j}"] = c["k"], c["v"]
         else:
@@ -284,11 +316,11 @@ def block_decode(x, bp, bc, cfg: ModelConfig, pos):
             mixed = out2d[:, None, :]
             new_cache[f"mconv_{j}"], new_cache[f"mssm_{j}"] = st["conv"], st["ssm"]
         if cfg.parallel_block:
-            x = x + mixed + _mix_mlp(h, bp, j, mlp_kind, cfg)
+            x = x + mixed + _mix_mlp(h, bp, j, mlp_kind, cfg, decode=True)
         else:
             x = x + mixed
             h2 = rms_norm(x, bp[f"norm2_{j}"])
-            x = x + _mix_mlp(h2, bp, j, mlp_kind, cfg)
+            x = x + _mix_mlp(h2, bp, j, mlp_kind, cfg, decode=True)
     return x, new_cache
 
 
@@ -359,24 +391,37 @@ def forward(cfg: ModelConfig, params, batch) -> jax.Array:
     return _lm_head(cfg, params, x)
 
 
-def prefill(cfg: ModelConfig, params, batch):
+def prefill(cfg: ModelConfig, params, batch, lengths=None):
+    """Forward + cache emit.  ``lengths`` (B,) serves a ragged bucket:
+    prompts are right-padded to the batch max, causal masking keeps
+    every real token's activations bit-identical to an unpadded run,
+    and the returned logits are each sequence's own last *real* token
+    (index ``lengths - 1``).  Pad-slot cache rows are garbage — the
+    ragged decode path masks them out via per-sequence valid lengths."""
     x = _embed_in(cfg, params, batch)
 
     def body(x, bp):
         return block_seq(x, bp, cfg, emit_cache=True)
 
     x, cache = _scan_blocks(cfg, params, x, body)
+    if lengths is None:
+        x = x[:, -1:]
+    else:
+        x = jnp.take_along_axis(x, (lengths - 1)[:, None, None], axis=1)
     x = rms_norm(x, params["final_norm"])
-    return _lm_head(cfg, params, x[:, -1:]), cache
+    return _lm_head(cfg, params, x), cache
 
 
-def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
-    """tokens: (B,) int32; pos: scalar int32.  Returns (logits, cache)."""
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos, kv_kbits=None):
+    """tokens: (B,) int32; pos: scalar int32 — or (B,) int32 for a
+    ragged bucket (per-sequence absolute positions).  ``kv_kbits``
+    FRAC-fake-quantizes the decode-written KV slot in place (see
+    _attn_decode).  Returns (logits, cache)."""
     x = params["embed"][tokens][:, None, :]                 # (B, 1, D)
 
     def body(x, bp_bc):
         bp, bc = bp_bc
-        return block_decode(x, bp, bc, cfg, pos)
+        return block_decode(x, bp, bc, cfg, pos, kv_kbits)
 
     if cfg.remat == "full":
         pass  # no grads in decode; remat irrelevant

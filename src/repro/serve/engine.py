@@ -1,25 +1,47 @@
-"""Batched serving engine (prefill + decode with KV caches).
+"""Continuous-batching serving engine — device-resident decode.
 
-Length-bucketed static batching: requests with equal prompt length share
-a prefill; the decode loop advances the whole batch one token per step
-against the donated cache.  FRAC-quantized KV caches
-(``kv_frac_kbits`` dial) are a config option — the capacity↔fidelity
-trade from the paper applied to serving memory: after prefill the whole
-prompt KV is pushed through the fused quantize→pack pipeline
-(kernels/frac_pack/ops.py fake-quant), so decode reads exactly the
-fidelity a k-bit FRAC cell array would return while holding k/32 of the
-fp32 bytes.  ``stats.kv_bytes_full`` / ``stats.kv_bytes_frac`` record
-the modeled capacity win (byte math via the codec's single source of
-truth, ``kernels/frac_pack/ops.compressed_nbytes``).  The SP-decode
-cache sharding (cache sequence dim over 'model') comes from
-sharding/rules.py when a mesh is provided.
+The hot path is a jitted ``lax.while_loop``: tokens, per-sequence
+positions, the alive mask, per-sequence emitted counts and the output
+buffer all live on device, with the KV cache donated into the loop.
+The host sees results exactly once per bucket (one ``jax.device_get``
+of the packed outputs), not once per token — the seed engine's
+per-token ``np.asarray`` sync and Python dispatch are gone, which is
+where the operational J/token win lives (serving efficiency dominates
+the footprint: Chasing Carbon / GreenFPGA).  The loop exits early the
+moment every sequence has hit EOS or its own ``max_new_tokens``.
+
+Buckets are *ragged* where the model family allows it
+(``model.supports_ragged``): mixed-length prompts are right-padded to
+the bucket max and share one prefill; per-sequence positions / valid
+lengths are threaded through ``model.decode_step`` so each lane writes
+its own cache slot and masks its own span.  Outputs are bit-identical
+to serving each request alone (greedy; locked by tests).  Families
+with rolling (SWA) windows, unfrozen state emit (hybrid/audio) or
+group-coupled prefill routing (MoE capacity) fall back to exact-length
+buckets.  Admission is slot-based: each bucket
+fills up to ``max_batch`` slots from the pending queue at bucket
+boundaries, completed requests drain into a results map, so sustained
+load stays O(pending).
+
+FRAC KV (``kv_frac_kbits``): prefill KV *and* every decode-written KV
+slot are fake-quantized through the FRAC pipeline as they are produced
+(slot-granular scales — see ``ops.fake_quant_slots`` — so batching
+never changes a lane's numerics), holding ~k/32 of the fp32 bytes.
+``stats.kv_bytes_full`` / ``stats.kv_bytes_frac`` book the modeled
+capacity win with the codec's single source of truth,
+``kernels/frac_pack/ops.compressed_nbytes``, over the whole decode
+horizon — honest now that decode-written rows really are quantized.
 
 Sustainability: every finished request is metered through a
-``SustainabilityMeter`` — its share of bucket wall time at facility
-power (J/token), chip occupancy, and the FRAC KV bytes' flash-tier
-residency charged through ``embodied.flash_tb(recycled=True)``.  Typed
-``EnergyReport``s land in ``engine.reports[rid]``;
-``engine.energy_report()`` is the cumulative account.
+``SustainabilityMeter`` — its token-share of bucket wall time at
+facility power (J/token), chip occupancy, and the FRAC KV bytes'
+flash-tier residency via ``embodied.flash_tb(recycled=True)``.  Only
+tokens actually decoded are booked (early exit included).  Typed
+``EnergyReport``s land in ``engine.reports[rid]``.
+
+An optional ``mesh`` shards params (weight rule), caches (decode-cache
+rule) and the loop's per-sequence vectors (``serve_loop_spec``) via
+sharding/rules.py.
 """
 from __future__ import annotations
 
@@ -34,7 +56,7 @@ from repro.configs.base import ModelConfig
 from repro.core.ese.meter import MeterConfig, SustainabilityMeter
 from repro.core.ese.records import EnergyReport
 from repro.models import model
-from repro.models.common import greedy_sample
+from repro.models.common import greedy_sample, is_leaf_spec
 
 
 @dataclass
@@ -54,152 +76,281 @@ class ServeStats:
     requests: int = 0
     tokens: int = 0
     prefills: int = 0
-    decode_steps: int = 0
+    decode_steps: int = 0           # device loop iterations (from the loop)
+    host_syncs: int = 0             # decode-phase host transfers (1/bucket)
     ttft_s: list[float] = field(default_factory=list)
     kv_bytes_full: int = 0          # fp bytes the caches would occupy
     kv_bytes_frac: int = 0          # bytes after the FRAC kbits dial
+
+
+def build_decode_loop(mcfg: ModelConfig, *, eos_id: int | None = None,
+                      kv_kbits: int | None = None, ragged: bool = False,
+                      out_cap: int = 1):
+    """Jitted device-resident multi-token decode.
+
+    Returns ``loop(params, cache, tok0, pos0, max_new) ->
+    (out (B, out_cap) int32, n_out (B,) int32, steps int32 scalar,
+    final cache)``.
+    The cache is donated; the carry (tokens, positions, alive mask,
+    output buffer, emitted counts) never leaves the device, and the
+    ``while_loop`` exits as soon as every lane is dead (EOS or its own
+    ``max_new``).  ``ragged`` decodes with per-sequence positions;
+    otherwise the shared scalar position keeps the cheap
+    dynamic-update-slice cache write.
+    """
+
+    def loop(params, cache, tok0, pos0, max_new):
+        B = tok0.shape[0]
+        col = jnp.arange(out_cap, dtype=jnp.int32)[None, :]   # (1, out_cap)
+        out = jnp.where(col == 0, tok0[:, None], 0).astype(jnp.int32)
+        n_out = jnp.ones((B,), jnp.int32)
+        alive = n_out < max_new
+        if eos_id is not None:
+            alive = alive & (tok0 != eos_id)
+
+        def cond(c):
+            return c[2].any()
+
+        def body(c):
+            cache, tok, alive, pos, out, n_out, steps = c
+            p = pos if ragged else pos[0]
+            logits, cache = model.decode_step(mcfg, params, cache, tok, p,
+                                              kv_kbits=kv_kbits)
+            nxt = greedy_sample(logits)
+            # one-hot predicated write: dead lanes record nothing
+            out = jnp.where(alive[:, None] & (col == n_out[:, None]),
+                            nxt[:, None], out)
+            n_out = n_out + alive.astype(jnp.int32)
+            alive = alive & (n_out < max_new)
+            if eos_id is not None:
+                alive = alive & (nxt != eos_id)
+            tok = jnp.where(alive, nxt, tok)
+            return (cache, tok, alive, pos + 1, out, n_out, steps + 1)
+
+        c = jax.lax.while_loop(
+            cond, body, (cache, tok0, alive, pos0, out, n_out, jnp.int32(0)))
+        # the final cache is returned (and dropped by the caller) so the
+        # donated input has a same-shaped output to alias into — true
+        # in-place decode, no per-bucket cache copy
+        return c[4], c[5], c[6], c[0]
+
+    return jax.jit(loop, donate_argnums=(1,))
 
 
 class ServeEngine:
     def __init__(self, mcfg: ModelConfig, params, *, max_batch: int = 8,
                  eos_id: int | None = None,
                  kv_frac_kbits: int | None = None,
-                 meter: SustainabilityMeter | None = None):
+                 meter: SustainabilityMeter | None = None,
+                 mesh=None):
         self.mcfg = mcfg
-        self.params = params
         self.max_batch = max_batch
         self.eos_id = eos_id
         self.kv_frac_kbits = kv_frac_kbits
         self.meter = meter or SustainabilityMeter(MeterConfig(), name="serve")
         self.reports: dict[int, EnergyReport] = {}
-        self._queue: list[Request] = []
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.sharding import rules
+
+            params = jax.device_put(
+                params, rules.param_shardings(model.param_specs(mcfg), mesh))
+        self.params = params
+        self._pending: list[Request] = []   # O(pending): completed drain out
+        self._results: dict[int, list[int]] = {}
         self._next_rid = 0
         self.stats = ServeStats()
-        self._prefill = jax.jit(lambda p, b: model.prefill(mcfg, p, b))
-        self._decode = jax.jit(
-            lambda p, c, t, pos: model.decode_step(mcfg, p, c, t, pos),
-            donate_argnums=(1,),
-        )
+        self._ragged_ok = model.supports_ragged(mcfg)
+        self._prefill = jax.jit(self._prefill_fn)
+        self._loops: dict[tuple, object] = {}
 
+    # -- admission -----------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(Request(rid, np.asarray(prompt, np.int32),
-                                   max_new_tokens, t_submit=time.time()))
+        self._pending.append(Request(rid, np.asarray(prompt, np.int32),
+                                     max_new_tokens, t_submit=time.time()))
         self.stats.requests += 1
         return rid
 
     def _next_bucket(self) -> list[Request]:
-        """Largest same-prompt-length group, up to max_batch."""
-        pending = [r for r in self._queue if not r.done]
-        if not pending:
+        """Fill up to ``max_batch`` slots from the pending queue.
+
+        Ragged families: the FIFO head anchors the bucket and the free
+        slots go to the pending requests nearest in prompt length
+        (bounds padding waste while keeping head-of-line latency).
+        Exact-length families: the largest same-length group.
+        """
+        if not self._pending:
             return []
+        if self._ragged_ok:
+            head = self._pending[0]
+            hl = len(head.prompt)
+            rest = sorted(self._pending[1:],
+                          key=lambda r: abs(len(r.prompt) - hl))
+            return [head] + rest[: self.max_batch - 1]
         by_len: dict[int, list[Request]] = {}
-        for r in pending:
+        for r in self._pending:
             by_len.setdefault(len(r.prompt), []).append(r)
         best = max(by_len.values(), key=len)
         return best[: self.max_batch]
 
     def run(self) -> dict[int, list[int]]:
-        """Serve every queued request to completion."""
-        while True:
-            bucket = self._next_bucket()
-            if not bucket:
-                break
-            self._serve_bucket(bucket)
-        return {r.rid: r.output for r in self._queue}
+        """Serve until the pending queue is empty.  Requests submitted
+        between buckets join free slots at the next bucket boundary.
+        Returns {rid: tokens} for every completed request."""
+        while self._pending:
+            self._serve_bucket(self._next_bucket())
+        return dict(self._results)
 
+    # -- one bucket ----------------------------------------------------------
     def _serve_bucket(self, bucket: list[Request]) -> None:
         B = len(bucket)
-        S = len(bucket[0].prompt)
-        max_new = max(r.max_new_tokens for r in bucket)
-        prompts = jnp.asarray(np.stack([r.prompt for r in bucket]))
-        batch = {"tokens": prompts}
+        lens = np.asarray([len(r.prompt) for r in bucket], np.int32)
+        S = int(lens.max())
+        ragged = self._ragged_ok and bool((lens != S).any())
+        max_new = np.asarray([max(1, r.max_new_tokens) for r in bucket],
+                             np.int32)
+        # round the decode horizon (output buffer AND cache tail) up to
+        # a power of two: per-lane max_new bounds emission inside the
+        # loop and n_out trims the result, so the only effect is a
+        # bounded set of compiled loop variants instead of one recompile
+        # per distinct max_new mix.  Byte accounting below still books
+        # the *actual* horizon, not the rounded allocation.
+        horizon = int(max_new.max())
+        out_cap = 1 << (horizon - 1).bit_length()
+        prompts = np.zeros((B, S), np.int32)
+        for i, r in enumerate(bucket):
+            prompts[i, : lens[i]] = r.prompt
+        batch = {"tokens": jnp.asarray(prompts)}
         if self.mcfg.family == "audio":
             batch["enc_embeds"] = jnp.zeros(
                 (B, self.mcfg.encoder_seq, self.mcfg.d_model), jnp.bfloat16
             )
         t_bucket0 = time.time()
-        bucket_kv_frac = 0
-        logits, cache = self._prefill(self.params, batch)
+        tok0, cache = self._prefill(
+            self.params, batch, jnp.asarray(lens) if ragged else None)
         self.stats.prefills += 1
-        # grow cache to S + max_new slots
-        cache = self._grow_cache(cache, B, S, S + max_new)
+        cache = self._grow_cache(cache, B, S + out_cap)
+        bucket_kv_frac = 0
         if self.kv_frac_kbits is not None:
-            cache, bucket_kv_frac = self._frac_cache(cache)
-        tok = greedy_sample(logits[:, -1])
+            cache, bucket_kv_frac = self._frac_cache(cache, B, S + horizon)
+        pos0 = jnp.asarray(lens)
+        mn = jnp.asarray(max_new)
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding
+
+            from repro.sharding import rules
+
+            specs = model.cache_specs(self.mcfg, B, S + out_cap)
+            cache = jax.device_put(
+                cache, rules.cache_shardings(specs, self.mesh, B))
+            vec, _ = rules.serve_loop_spec(self.mesh, B)
+            sh = NamedSharding(self.mesh, vec)
+            tok0, pos0, mn = jax.device_put((tok0, pos0, mn), (sh, sh, sh))
+        # first token is ready here: TTFT measured from each request's
+        # own submit time (a sync, not a transfer — the value stays on
+        # device and rides the output buffer)
+        tok0.block_until_ready()
         t_first = time.time()
-        for r, t in zip(bucket, np.asarray(tok)):
-            r.t_first = t_first
-            r.output.append(int(t))
-        alive = np.ones(B, bool)
-        for i in range(1, max_new):
-            pos = jnp.int32(S + i - 1)
-            logits, cache = self._decode(self.params, cache, tok, pos)
-            tok = greedy_sample(logits)
-            self.stats.decode_steps += 1
-            for bi, (r, t) in enumerate(zip(bucket, np.asarray(tok))):
-                if not alive[bi]:
-                    continue
-                r.output.append(int(t))
-                if self.eos_id is not None and int(t) == self.eos_id:
-                    alive[bi] = False
-                if len(r.output) >= r.max_new_tokens:
-                    alive[bi] = False
-            if not alive.any():
-                break
-        now = time.time()
-        bucket_dt = now - t_bucket0
-        total_toks = sum(len(r.output) for r in bucket) or 1
         for r in bucket:
+            r.t_first = t_first
+            self.stats.ttft_s.append(t_first - r.t_submit)
+        loop = self._get_loop(ragged, out_cap)
+        out, n_out, steps, _ = loop(self.params, cache, tok0, pos0, mn)
+        # the decode phase's single host transfer
+        out_np, n_np, steps_np = jax.device_get((out, n_out, steps))
+        self.stats.host_syncs += 1
+        now = time.time()
+        self.stats.decode_steps += int(steps_np)
+        bucket_dt = now - t_bucket0
+        total_toks = int(n_np.sum()) or 1
+        done_ids = set()
+        for i, r in enumerate(bucket):
+            ntok = int(n_np[i])
+            r.output = [int(t) for t in out_np[i, :ntok]]
             r.done = True
             r.t_done = now
-            self.stats.tokens += len(r.output)
-            self.stats.ttft_s.append(r.t_first - r.t_submit)
+            done_ids.add(r.rid)
+            self._results[r.rid] = r.output
+            self.stats.tokens += ntok
             # sustainability: this request's token-share of the bucket's
-            # wall time, plus its slice of the FRAC KV flash residency
+            # wall time, plus its slice of the FRAC KV flash residency.
+            # Early exit books only the tokens actually decoded.
             self.reports[r.rid] = self.meter.request(
-                len(r.output), bucket_dt * len(r.output) / total_toks,
+                ntok, bucket_dt * ntok / total_toks,
                 rid=r.rid, kv_frac_bytes=bucket_kv_frac // B,
                 kv_occupancy_s=bucket_dt,
             )
+        self._pending = [p for p in self._pending if p.rid not in done_ids]
+
+    # -- pieces --------------------------------------------------------------
+    def _prefill_fn(self, params, batch, lengths):
+        logits, cache = model.prefill(self.mcfg, params, batch,
+                                      lengths=lengths)
+        return greedy_sample(logits[:, -1]), cache
+
+    def _get_loop(self, ragged: bool, out_cap: int):
+        key = (ragged, out_cap)
+        if key not in self._loops:
+            self._loops[key] = build_decode_loop(
+                self.mcfg, eos_id=self.eos_id, kv_kbits=self.kv_frac_kbits,
+                ragged=ragged, out_cap=out_cap)
+        return self._loops[key]
 
     def energy_report(self) -> EnergyReport:
         """Cumulative EnergyReport over everything served so far."""
         return self.meter.report()
 
-    def _frac_cache(self, cache):
+    def _frac_cache(self, cache, B: int, S_cache: int):
         """Emulate a FRAC-stored KV cache: every float leaf goes through
-        the fused quantize→dequantize pipeline at ``kv_frac_kbits``, so
-        subsequent decode steps see exactly the fidelity the k-bit cell
-        array would return.  Books the modeled byte savings in stats and
-        returns (cache, frac bytes booked for this bucket)."""
+        slot-granular fake-quant at ``kv_frac_kbits`` (one scale per
+        (kv_heads, head_dim) row for attention KV — the cell-array write
+        unit — so a lane's fidelity never depends on its bucket
+        neighbours; state-space leaves quantize per trailing row).
+        Decode-written slots are quantized the same way *inside* the
+        loop (model.decode_step kv_kbits).  Books the modeled byte
+        savings over the *actual* decode horizon (``S_cache`` = prompt
+        + bucket max_new) via the codec's ``compressed_nbytes`` — the
+        allocated cache may be padded further to a power-of-two tail
+        for compile-variant bounding, but those never-writable slots
+        are not billed.  Returns (cache, frac bytes)."""
         from repro.kernels.frac_pack import ops as fops
 
         k = self.kv_frac_kbits
+        specs = model.cache_specs(self.mcfg, B, S_cache)
+        leaves, treedef = jax.tree.flatten(cache)
+        spec_leaves = jax.tree.leaves(specs, is_leaf=is_leaf_spec)
         frac_bytes = 0
-        for leaf in jax.tree.leaves(cache):
+        new = []
+        for leaf, spec in zip(leaves, spec_leaves):
             if jnp.issubdtype(leaf.dtype, jnp.floating):
-                self.stats.kv_bytes_full += leaf.size * leaf.dtype.itemsize
-                # packed uint32 words + one fp32 scale per quant block;
-                # the codec owns this math (exact also for fractional k,
-                # e.g. the 11-bit cell-code dial)
-                frac_bytes += fops.compressed_nbytes(leaf.size, k)
+                n = int(np.prod(spec.shape))       # horizon, not allocation
+                self.stats.kv_bytes_full += n * leaf.dtype.itemsize
+                # packed words + one fp32 scale per quant block; the
+                # codec owns this math (exact also for fractional k)
+                frac_bytes += fops.compressed_nbytes(n, k)
+                rd = 2 if spec.dims[-2:] == ("kv_heads", "head_dim") else 1
+                leaf = fops.fake_quant_slots(leaf, k, row_dims=rd)
+            new.append(leaf)
         self.stats.kv_bytes_frac += frac_bytes
-        return fops.fake_quant_tree(cache, k), frac_bytes
+        return jax.tree.unflatten(treedef, new), frac_bytes
 
-    def _grow_cache(self, cache, B: int, cur: int, target: int):
-        """Pad prefill caches (built at prompt length) out to the decode
-        horizon.  Rolling (SWA) caches already have fixed window size."""
-        specs = model.cache_specs(self.mcfg, B, target)
-        from repro.models.common import is_leaf_spec
+    def _grow_cache(self, cache, B: int, target: int):
+        return grow_cache(self.mcfg, cache, B, target)
 
-        def grow(spec, leaf):
-            want = spec.shape
-            if leaf.shape == want:
-                return leaf
-            pads = [(0, w - h) for h, w in zip(leaf.shape, want)]
-            return jnp.pad(leaf, pads)
 
-        return jax.tree.map(grow, specs, cache,
-                            is_leaf=lambda x: is_leaf_spec(x))
+def grow_cache(mcfg: ModelConfig, cache, B: int, target: int):
+    """Pad prefill caches (built at prompt length) out to the decode
+    horizon.  Rolling (SWA) caches already have fixed window size."""
+    specs = model.cache_specs(mcfg, B, target)
+
+    def grow(spec, leaf):
+        want = spec.shape
+        if leaf.shape == want:
+            return leaf
+        pads = [(0, w - h) for h, w in zip(leaf.shape, want)]
+        return jnp.pad(leaf, pads)
+
+    return jax.tree.map(grow, specs, cache,
+                        is_leaf=lambda x: is_leaf_spec(x))

@@ -147,6 +147,18 @@ def cache_spec(
     return P(*assign)
 
 
+def serve_loop_spec(mesh: Mesh, batch: int) -> tuple[P, P]:
+    """PartitionSpecs for the serve engine's device-resident decode-loop
+    carries: the per-sequence vectors (tokens / positions / alive mask /
+    emitted counts, shape (B,)) and the output buffer (B, out_cap).
+    Batch-sharded over the data axes like model inputs, replicated
+    otherwise — the loop then runs without any cross-device traffic
+    beyond what the model itself needs."""
+    baxes = batch_axes(mesh, batch)
+    b = (baxes if len(baxes) > 1 else baxes[0]) if baxes else None
+    return P(b), P(b, None)
+
+
 def input_sharding(mesh: Mesh, shape, dims, global_batch: int) -> NamedSharding:
     """Model inputs: batch-sharded, everything else replicated."""
     baxes = batch_axes(mesh, global_batch)

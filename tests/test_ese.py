@@ -143,6 +143,45 @@ def test_billing_incentives():
     assert offpeak.usd <= flat.usd + 1e-9  # abundant renewables are cheap
 
 
+def test_serve_meter_books_only_decoded_tokens():
+    """Early exit must book exactly the tokens actually decoded — a
+    bucket killed by EOS before max_new charges J for its real tokens,
+    not the horizon (trainer-style accounting identities)."""
+    import jax
+    import pytest as _pytest
+
+    from repro.configs import get_tiny
+    from repro.core.ese.meter import MeterConfig, SustainabilityMeter
+    from repro.models import model
+    from repro.serve.engine import ServeEngine
+
+    mcfg = get_tiny("llama3.2-3b")
+    params = model.init_params(mcfg, jax.random.PRNGKey(0))
+    probe = ServeEngine(mcfg, params, max_batch=1)
+    pr = probe.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=8)
+    ref = probe.run()[pr]
+    eos = ref[-1]
+    want = ref[: ref.index(eos) + 1]
+    meter = SustainabilityMeter(MeterConfig(flat_w=100.0), name="serve")
+    eng = ServeEngine(mcfg, params, max_batch=2, eos_id=eos, meter=meter)
+    r1 = eng.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=8)
+    r2 = eng.submit(np.arange(2, 10, dtype=np.int32), max_new_tokens=8)
+    res = eng.run()
+    assert res[r1] == want                    # early exit happened
+    # golden identities: booked tokens == decoded tokens, per request
+    # and in total; J split across the bucket proportional to tokens
+    for rid in (r1, r2):
+        assert eng.reports[rid].detail["tokens"] == len(res[rid])
+    assert meter.totals.tokens == len(res[r1]) + len(res[r2])
+    assert meter.totals.requests == 2
+    share = {rid: eng.reports[rid].operational_j / max(len(res[rid]), 1)
+             for rid in (r1, r2)}
+    assert share[r1] == _pytest.approx(share[r2], rel=1e-6)
+    total = eng.energy_report()
+    assert total.operational_j == _pytest.approx(
+        sum(r.operational_j for r in eng.reports.values()))
+
+
 def test_latency_head_on_synthetic_records():
     rng = np.random.default_rng(0)
     recs = []

@@ -59,6 +59,20 @@ def test_batch_axes_divisibility():
     assert batch_axes(MESH, 128) == ("data",)
 
 
+def test_serve_loop_spec():
+    """Decode-loop carries: (B,) vectors and the (B, out_cap) output
+    buffer are batch-sharded exactly like model inputs."""
+    from repro.sharding.rules import serve_loop_spec
+
+    vec, buf = serve_loop_spec(MESH, 32)
+    assert vec == P("data") and buf == P("data", None)
+    vec3, buf3 = serve_loop_spec(MESH3, 256)
+    assert vec3 == P(("pod", "data")) and buf3 == P(("pod", "data"), None)
+    # indivisible batch replicates instead of failing
+    vec1, buf1 = serve_loop_spec(MESH, 3)
+    assert vec1 == P(None) and buf1 == P(None, None)
+
+
 def test_cache_spec_kv_heads_divisible():
     # whisper: 16 kv heads on 16-way model axis
     spec = cache_spec((128, 32768, 16, 64),

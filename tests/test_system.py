@@ -51,7 +51,8 @@ def test_full_lifecycle(tmp_path):
 
 def test_serve_frac_kv_cache():
     """FRAC KV-cache dial: decode still produces tokens and the stats
-    book the modeled k/32 capacity win."""
+    book the modeled k/32 capacity win — now over the whole decode
+    horizon, since decode-written slots are quantized in the loop."""
     mcfg = get_tiny(ARCH)
     from repro.models import model as m
     params = m.init_params(mcfg, jax.random.PRNGKey(0))
@@ -63,6 +64,20 @@ def test_serve_frac_kv_cache():
     assert eng.stats.kv_bytes_full > 0
     # 8-bit codes on bf16/fp32 KV + scales: at least ~1.9x smaller
     assert eng.stats.kv_bytes_frac < eng.stats.kv_bytes_full / 1.9
+    # byte accounting is exactly the codec's single source of truth over
+    # every float leaf of the grown (prompt + decode horizon) cache
+    from repro.kernels.frac_pack import ops as fops
+    from repro.models.common import is_leaf_spec
+    specs = m.cache_specs(mcfg, 2, 8 + 4)
+    leaves = jax.tree.leaves(specs, is_leaf=is_leaf_spec)
+    expect_frac = sum(
+        fops.compressed_nbytes(int(np.prod(s.shape)), 8)
+        for s in leaves if jnp.issubdtype(s.dtype, jnp.floating))
+    expect_full = sum(
+        int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+        for s in leaves if jnp.issubdtype(s.dtype, jnp.floating))
+    assert eng.stats.kv_bytes_frac == expect_frac
+    assert eng.stats.kv_bytes_full == expect_full
     # the FRAC KV bytes were charged to the recycled flash tier and the
     # per-request reports carry the kv share
     assert "nand-tb" in eng.meter.footprint.by_unit
@@ -73,6 +88,138 @@ def test_serve_frac_kv_cache():
     eng_full.submit(np.arange(2, 10, dtype=np.int32), max_new_tokens=4)
     res_full = eng_full.run()
     assert set(res) == set(res_full)
+
+
+@pytest.mark.parametrize("arch,kbits", [
+    ("llama3.2-3b", None),        # dense attention, per-seq positions
+    ("llama3.2-3b", 8),           # slot-granular FRAC KV stays per-lane
+    ("rwkv6-1.6b", None),         # state freeze at each lane's length
+])
+def test_serve_ragged_parity(arch, kbits):
+    """A mixed-length bucket (one shared prefill, right-padded) must be
+    bit-identical to serving every request alone — greedy, same params,
+    per-request max_new respected."""
+    from repro.models import model as m
+    mcfg = get_tiny(arch)
+    params = m.init_params(mcfg, jax.random.PRNGKey(0))
+    prompts = [np.arange(1, 6, dtype=np.int32),
+               np.arange(2, 12, dtype=np.int32),
+               np.arange(3, 10, dtype=np.int32)]
+    max_new = [3, 6, 5]
+    eng = ServeEngine(mcfg, params, max_batch=4, kv_frac_kbits=kbits)
+    rids = [eng.submit(p, max_new_tokens=n) for p, n in zip(prompts, max_new)]
+    batched = eng.run()
+    assert eng.stats.prefills == 1          # one ragged bucket
+    for rid, p, n in zip(rids, prompts, max_new):
+        solo = ServeEngine(mcfg, params, max_batch=1, kv_frac_kbits=kbits)
+        sr = solo.submit(p, max_new_tokens=n)
+        assert solo.run()[sr] == batched[rid], (arch, kbits, rid)
+        assert len(batched[rid]) == n
+
+
+def test_serve_eos_and_per_request_max_new_early_exit():
+    """EOS / per-request max_new kill lanes inside the scanned loop and
+    the loop exits the moment every lane is dead."""
+    from repro.models import model as m
+    mcfg = get_tiny(ARCH)
+    params = m.init_params(mcfg, jax.random.PRNGKey(0))
+    probe = ServeEngine(mcfg, params, max_batch=1)
+    pr = probe.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=8)
+    ref = probe.run()[pr]
+    eos = ref[-1]
+    want = ref[: ref.index(eos) + 1]         # truncate at first EOS
+    eng = ServeEngine(mcfg, params, max_batch=2, eos_id=eos)
+    r1 = eng.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=8)
+    r2 = eng.submit(np.arange(2, 10, dtype=np.int32), max_new_tokens=2)
+    res = eng.run()
+    assert res[r1] == want
+    assert len(res[r2]) <= 2
+    # the loop ran only as long as the longest-lived lane needed
+    longest = max(len(res[r1]), len(res[r2]))
+    assert eng.stats.decode_steps <= longest
+    assert eng.stats.tokens == len(res[r1]) + len(res[r2])
+
+
+def test_serve_decode_is_device_resident(monkeypatch):
+    """Exactly one host transfer per bucket in the decode phase, and the
+    decode phase lowers to a single while_loop (tokens never bounce
+    through Python between steps)."""
+    from repro.models import model as m
+    from repro.serve.engine import build_decode_loop
+    mcfg = get_tiny(ARCH)
+    params = m.init_params(mcfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(mcfg, params, max_batch=2)
+    eng.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=6)
+    eng.submit(np.arange(2, 10, dtype=np.int32), max_new_tokens=6)
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get",
+                        lambda x: (calls.append(1), real(x))[1])
+    res = eng.run()
+    assert all(len(v) == 6 for v in res.values())
+    assert eng.stats.prefills == 1
+    assert len(calls) == 1                  # one transfer for the bucket
+    assert eng.stats.host_syncs == 1
+    # jaxpr: the whole multi-token decode is one while primitive
+    loop = build_decode_loop(mcfg, out_cap=6)
+    aparams = m.abstract_params(mcfg)
+    acache = m.abstract_cache(mcfg, 2, 14)
+    vec = jax.ShapeDtypeStruct((2,), jnp.int32)
+    jaxpr = jax.make_jaxpr(loop)(aparams, acache, vec, vec, vec)
+    assert "while" in str(jaxpr)
+
+
+def test_serve_ttft_from_submit_and_queue_drain():
+    """TTFT is measured from each request's own submit time, and
+    completed requests drain out of the pending queue (sustained load
+    stays O(pending) with results accumulating in the returned map)."""
+    import time as _time
+    from repro.models import model as m
+    mcfg = get_tiny(ARCH)
+    params = m.init_params(mcfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(mcfg, params, max_batch=4)
+    r1 = eng.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=2)
+    _time.sleep(0.05)
+    r2 = eng.submit(np.arange(2, 10, dtype=np.int32), max_new_tokens=2)
+    res = eng.run()
+    assert set(res) == {r1, r2}
+    assert len(eng.stats.ttft_s) == 2
+    # r1 waited in queue 50 ms longer than r2 before the shared bucket
+    assert eng.stats.ttft_s[0] >= eng.stats.ttft_s[1] + 0.04
+    assert eng._pending == []               # completed requests drained
+    # new submissions join free slots at the next bucket boundary and
+    # the results map keeps its shape (all completed rids)
+    r3 = eng.submit(np.arange(3, 11, dtype=np.int32), max_new_tokens=2)
+    res2 = eng.run()
+    assert set(res2) == {r1, r2, r3}
+    assert res2[r1] == res[r1]
+    assert eng.stats.prefills == 2 == eng.stats.host_syncs
+
+
+def test_serve_under_mesh_subprocess(subproc):
+    """Sharded serving (params via the weight rule, cache via the
+    decode-cache rule, loop vectors via serve_loop_spec) reproduces the
+    unsharded outputs."""
+    out = subproc("""
+import jax, numpy as np
+from repro.configs import get_tiny
+from repro.launch.mesh import make_host_mesh
+from repro.models import model
+from repro.serve.engine import ServeEngine
+
+mcfg = get_tiny("llama3.2-3b")
+params = model.init_params(mcfg, jax.random.PRNGKey(0))
+def serve(mesh):
+    eng = ServeEngine(mcfg, params, max_batch=2, mesh=mesh)
+    eng.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=4)
+    eng.submit(np.arange(2, 10, dtype=np.int32), max_new_tokens=4)
+    return eng.run()
+plain = serve(None)
+sharded = serve(make_host_mesh(2, 1))
+assert plain == sharded, (plain, sharded)
+print("MESH_SERVE_OK", sorted(plain))
+""", n_devices=2)
+    assert "MESH_SERVE_OK" in out
 
 
 def test_elastic_reshard_subprocess(subproc):
