@@ -142,8 +142,72 @@ def bench_engine_jpt() -> list[tuple]:
     return rows
 
 
+def bench_paged_memory() -> list[tuple]:
+    """Peak resident KV bytes, paged pool vs contiguous bucket-max, on
+    a skewed mixed-length bucket served end-to-end with in-loop
+    admission.  The contiguous engine allocates every lane at
+    bucket-max + horizon for the whole bucket; the paged engine's
+    high-water mark counts pages actually live (freed pages recycle
+    into admitted requests).  The ratio is the memory the paper's
+    embodied-residency accounting stops over-charging — CI gates it
+    > 1 in quick mode.  Also checks the paged super-bucket syncs once
+    where the bucket-boundary engine syncs per bucket."""
+    rows = []
+    archs = ("llama3.2-3b",)
+    for arch in archs:
+        mcfg = get_tiny(arch)
+        params = model.init_params(mcfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        # skewed bucket: one long prompt with a long decode horizon
+        # anchors bucket-max padding — the contiguous layout holds its
+        # short bucket-mate at (48 + 32) slots too, while the paged
+        # layout allocates each lane only the pages it touches
+        plens = [4, 6, PROMPT_LEN * 3, 5, 8, 6]
+        mnews = [4, 4, DECODE_STEPS, 4, 4, 4]
+        prompts = [rng.integers(1, mcfg.vocab_size, p).astype(np.int32)
+                   for p in plens]
+
+        def serve(paged: bool):
+            eng = ServeEngine(mcfg, params, max_batch=2, paged=paged,
+                              page_size=4)
+            for p, m in zip(prompts, mnews):
+                eng.submit(p, max_new_tokens=m)
+            t0 = time.perf_counter()
+            res = eng.run()
+            return eng, res, time.perf_counter() - t0
+
+        contig, res_c, _ = serve(False)
+        paged, res_p, _ = serve(True)
+        assert res_c == res_p, "paged/contiguous serving diverged"
+        rows.append((f"serve_kv_peak_contig_{arch}",
+                     contig.stats.kv_bytes_peak,
+                     f"bytes bucket-max layout buckets={contig.stats.prefills}"))
+        rows.append((f"serve_kv_peak_paged_{arch}",
+                     paged.stats.kv_bytes_peak,
+                     f"bytes live-pages model pages_peak="
+                     f"{paged.stats.kv_pages_peak} "
+                     f"admissions={paged.stats.admissions} "
+                     f"host_syncs={paged.stats.host_syncs}"))
+        rows.append((f"serve_kv_pool_paged_{arch}",
+                     paged.stats.kv_bytes_pool,
+                     "bytes physically provisioned pool (pow2-rounded)"))
+        rows.append((f"serve_kv_peak_ratio_{arch}",
+                     contig.stats.kv_bytes_peak
+                     / max(paged.stats.kv_bytes_peak, 1),
+                     "x_contig_over_paged resident-bytes model (ESE books)"))
+        rows.append((f"serve_kv_pool_ratio_{arch}",
+                     contig.stats.kv_bytes_pool
+                     / max(paged.stats.kv_bytes_pool, 1),
+                     "x_contig_over_paged physical allocation"))
+        rows.append((f"serve_paged_sync_saving_{arch}",
+                     contig.stats.host_syncs - paged.stats.host_syncs,
+                     "host_syncs removed by in-loop admission"))
+    return rows
+
+
 def run() -> list[tuple]:
     out = []
-    for fn in (bench_decode_throughput, bench_engine_jpt):
+    for fn in (bench_decode_throughput, bench_engine_jpt,
+               bench_paged_memory):
         out.extend(fn())
     return out

@@ -241,6 +241,18 @@ def compressed_nbytes(n: int, kbits: int) -> int:
     return codec.compressed_nbytes(n, kbits)
 
 
+def compressed_nbytes_pages(n_pages: int, page_elems: int,
+                            kbits: int) -> int:
+    """Encoded size of a *paged* stream: ``n_pages`` independent runs
+    of ``page_elems`` values each.  Pages are allocated and freed
+    independently (serve/paging.py), so they can never share packed
+    words or a trailing partial block — each page is booked as its own
+    ``compressed_nbytes`` stream.  This is the serve engine's byte
+    model for the paged FRAC KV tier: resident bytes scale with pages
+    actually allocated, not with the bucket-max horizon."""
+    return n_pages * codec.compressed_nbytes(page_elems, kbits)
+
+
 # ---------------------------------------------------------------------------
 # fake-quant (quantize→dequantize, no packed bytes materialized):
 # ef_compress numerics and the emulated FRAC KV cache

@@ -32,6 +32,12 @@ def main() -> None:
                          "(exercises ragged buckets where supported)")
     ap.add_argument("--kv-frac-kbits", type=int, default=None,
                     help="FRAC-quantize the KV cache at this bit width")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV pool + in-loop admission "
+                         "(falls back to contiguous for families "
+                         "without an appendable KV cache)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV slots per page in --paged mode")
     args = ap.parse_args()
 
     mcfg = get_tiny(args.arch)
@@ -46,7 +52,8 @@ def main() -> None:
         params = model.init_params(mcfg, jax.random.PRNGKey(0))
 
     eng = ServeEngine(mcfg, params, max_batch=8,
-                      kv_frac_kbits=args.kv_frac_kbits)
+                      kv_frac_kbits=args.kv_frac_kbits,
+                      paged=args.paged, page_size=args.page_size)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = args.prompt_len
@@ -71,6 +78,15 @@ def main() -> None:
     if s.kv_bytes_frac:
         print(f"kv_bytes: full={s.kv_bytes_full} frac={s.kv_bytes_frac} "
               f"({s.kv_bytes_full / s.kv_bytes_frac:.2f}x)")
+    if eng.paged:
+        print(f"paged: page_size={eng.page_size} "
+              f"pages_peak={s.kv_pages_peak} "
+              f"kv_bytes_peak={s.kv_bytes_peak} "
+              f"kv_bytes_pool={s.kv_bytes_pool} "
+              f"in_loop_admissions={s.admissions}")
+    elif args.paged:
+        print("paged: requested but family has no appendable KV cache "
+              "— served contiguous")
 
 
 if __name__ == "__main__":

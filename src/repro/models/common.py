@@ -270,6 +270,24 @@ def attention(
     return out.reshape(B, Sq, H, hd)
 
 
+def gather_pages(pool_leaf: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Read a paged KV pool through a page table.
+
+    ``pool_leaf``: (P, page_size, K, hd) shared page pool;
+    ``page_table``: (B, max_pages) int32, each row the sequence's pages
+    in logical order (unallocated entries are -1).  Returns
+    (B, max_pages * page_size, K, hd): row ``r`` of lane ``b`` is
+    logical position ``r`` — exactly the contiguous cache layout —
+    so the existing per-sequence ``kv_valid_len`` masks apply
+    unchanged (positions ``>= pos+1`` are masked, which covers every
+    row of an unallocated page).  Unallocated entries clamp to the
+    trash page; their values are garbage but finite and always masked.
+    """
+    gathered = pool_leaf[jnp.maximum(page_table, 0)]   # (B, MP, ps, K, hd)
+    b, mp, ps = gathered.shape[:3]
+    return gathered.reshape(b, mp * ps, *pool_leaf.shape[2:])
+
+
 def windowed_prefill_attention(
     q, k, v, *, window: int, chunk: int, q_positions=None
 ) -> jax.Array:

@@ -105,6 +105,38 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
     return _mod(cfg).decode_step(cfg, params, cache, tokens, pos, kv_kbits)
 
 
+def decode_step_paged(cfg: ModelConfig, params, pool, page_table, tokens,
+                      pos, *, kv_kbits: int | None = None, write_mask=None):
+    """One decode step against a paged KV pool (see serve/paging.py).
+    ``pos`` is always (B,); ``write_mask`` (B,) bool routes dead lanes'
+    cache writes to the trash page.  Only valid when
+    :func:`supports_paged`."""
+    assert supports_paged(cfg), f"{cfg.name}: family does not page"
+    return transformer.decode_step_paged(cfg, params, pool, page_table,
+                                         tokens, pos, kv_kbits, write_mask)
+
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Whether the family serves through the paged KV pool.
+
+    True for the attention families that already serve ragged buckets
+    with a full-length cache — their decode appends one KV row per step
+    at a per-sequence position, which maps 1:1 onto page-table writes.
+    False for state-space families (rwkv: O(1) state, nothing to page —
+    the engine falls back to the contiguous path), rolling (SWA)
+    windows (the rolling slot write crosses page boundaries
+    mid-stream), and the hybrid/audio/MoE families that cannot share a
+    ragged prefill (paged admission pre-stages requests through one
+    ragged prefill)."""
+    return supports_ragged(cfg) and cfg.family != "ssm"
+
+
+def paged_pool_specs(cfg: ModelConfig, n_pages: int, page_size: int):
+    """LeafSpecs for the shared paged KV pool (shapes + logical dims)."""
+    assert supports_paged(cfg), f"{cfg.name}: family does not page"
+    return transformer.paged_pool_specs(cfg, n_pages, page_size)
+
+
 def supports_ragged(cfg: ModelConfig) -> bool:
     """Whether mixed-length (right-padded) buckets serve with outputs
     bit-identical to solo serving.

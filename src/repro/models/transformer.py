@@ -26,6 +26,7 @@ from repro.models.common import (
     activate,
     apply_rope,
     attention,
+    gather_pages,
     rms_norm,
     stacked,
     windowed_prefill_attention,
@@ -219,6 +220,59 @@ def _attn_decode(x, ap, cfg: ModelConfig, cache, pos, kv_kbits=None):
     return out, {"k": ck, "v": cv}
 
 
+def _attn_decode_paged(x, ap, cfg: ModelConfig, pc, page_table, pos,
+                       kv_kbits=None, write_mask=None):
+    """One-token attention against a *paged* KV pool.  x: (B, 1, D).
+
+    ``pc`` holds the layer's shared pools ``{"k","v"}: (P, ps, K, hd)``;
+    ``page_table`` (B, max_pages) maps each lane's logical pages into
+    the pool (see serve/paging.py).  ``pos`` is always a (B,) vector —
+    the paged engine is ragged by construction.  The write lands at
+    ``pool[page_table[b, pos//ps], pos % ps]``; lanes outside
+    ``write_mask`` (dead lanes waiting for admission) are routed to the
+    reserved trash page 0, so a freed-and-reused page can never be
+    corrupted.  The read gathers the lane's pages back into contiguous
+    logical order (``gather_pages``) and masks with the same
+    per-sequence ``kv_valid_len`` as the contiguous path — per-row
+    values and mask prefix are identical, which is what keeps paged
+    decode bit-identical to the contiguous engine (locked by
+    tests/test_serve_paged.py).  ``kv_kbits`` fake-quantizes the
+    written slot at the same slot granularity as the contiguous path
+    (one scale per (K, hd) row — the byte *accounting* is per page,
+    the numerics per slot, so parity survives FRAC).
+    """
+    q = jnp.einsum("bsd,dhk->bshk", x, ap["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, ap["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, ap["wv"])
+    pos = jnp.asarray(pos)
+    ppos = pos[:, None]                                    # (B, 1)
+    q = apply_rope(q, ppos, cfg.rope_theta)
+    k = apply_rope(k, ppos, cfg.rope_theta)
+    if kv_kbits is not None:
+        from repro.kernels.frac_pack import ops as fops
+
+        k = fops.fake_quant_slots(k, kv_kbits, row_dims=2)
+        v = fops.fake_quant_slots(v, kv_kbits, row_dims=2)
+    ps = pc["k"].shape[1]
+    b = x.shape[0]
+    cols = jnp.clip(pos // ps, 0, page_table.shape[1] - 1)
+    pidx = page_table[jnp.arange(b), cols]                 # (B,)
+    ok = pidx > 0
+    if write_mask is not None:
+        ok = ok & write_mask
+    pidx = jnp.where(ok, pidx, 0)                          # trash page
+    off = pos % ps
+    pk = pc["k"].at[pidx, off].set(k[:, 0])
+    pv = pc["v"].at[pidx, off].set(v[:, 0])
+    kb = gather_pages(pk, page_table)
+    vb = gather_pages(pv, page_table)
+    out = attention(
+        q, kb, vb, causal=False, kv_valid_len=pos + 1, q_positions=ppos
+    )
+    out = jnp.einsum("bshk,hkd->bsd", out, ap["wo"])
+    return out, {"k": pk, "v": pv}
+
+
 def _mlp(x, mp, cfg: ModelConfig):
     up = x @ mp["w_up"]
     if cfg.gated_mlp:
@@ -322,6 +376,28 @@ def block_decode(x, bp, bc, cfg: ModelConfig, pos, kv_kbits=None):
             h2 = rms_norm(x, bp[f"norm2_{j}"])
             x = x + _mix_mlp(h2, bp, j, mlp_kind, cfg, decode=True)
     return x, new_cache
+
+
+def block_decode_paged(x, bp, pc, cfg: ModelConfig, page_table, pos,
+                       kv_kbits=None, write_mask=None):
+    """One token through one period block against paged pools.
+    Only pure-attention blocks page (model.supports_paged)."""
+    new_pc: dict[str, Any] = {}
+    for j, (mixer, mlp_kind) in enumerate(sublayer_kinds(cfg)):
+        assert mixer == "attn", "paged decode is attention-only"
+        h = rms_norm(x, bp[f"norm1_{j}"])
+        mixed, c = _attn_decode_paged(
+            h, bp[f"attn_{j}"], cfg, {"k": pc[f"k_{j}"], "v": pc[f"v_{j}"]},
+            page_table, pos, kv_kbits, write_mask,
+        )
+        new_pc[f"k_{j}"], new_pc[f"v_{j}"] = c["k"], c["v"]
+        if cfg.parallel_block:
+            x = x + mixed + _mix_mlp(h, bp, j, mlp_kind, cfg, decode=True)
+        else:
+            x = x + mixed
+            h2 = rms_norm(x, bp[f"norm2_{j}"])
+            x = x + _mix_mlp(h2, bp, j, mlp_kind, cfg, decode=True)
+    return x, new_pc
 
 
 # ---------------------------------------------------------------------------
@@ -428,6 +504,45 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos, kv_kbits=None):
     x, new_cache = lax.scan(body, x, (params["layers"], cache))
     x = rms_norm(x, params["final_norm"])
     return _lm_head(cfg, params, x)[:, 0], new_cache
+
+
+def decode_step_paged(cfg: ModelConfig, params, pool, page_table, tokens,
+                      pos, kv_kbits=None, write_mask=None):
+    """tokens: (B,) int32; pos: (B,) int32 per-sequence positions;
+    ``pool``: per-layer paged KV pools (stacked over period blocks like
+    the contiguous cache, leaves (n_periods, P, ps, K, hd));
+    ``page_table``: (B, max_pages), one table for every layer (the
+    whole stack grows in lockstep).  Returns (logits, pool)."""
+    x = params["embed"][tokens][:, None, :]                 # (B, 1, D)
+
+    def body(x, bp_pc):
+        bp, pc = bp_pc
+        return block_decode_paged(x, bp, pc, cfg, page_table, pos,
+                                  kv_kbits, write_mask)
+
+    x, new_pool = lax.scan(body, x, (params["layers"], pool))
+    x = rms_norm(x, params["final_norm"])
+    return _lm_head(cfg, params, x)[:, 0], new_pool
+
+
+def paged_pool_specs(cfg: ModelConfig, n_pages: int, page_size: int) -> dict:
+    """LeafSpecs for the shared page pool (paged serve engine)."""
+    n_periods = cfg.num_layers // block_period(cfg)
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    block: dict[str, LeafSpec] = {}
+    for j, (mixer, _) in enumerate(sublayer_kinds(cfg)):
+        assert mixer == "attn", "paged pools are attention-only"
+        for name in ("k", "v"):
+            block[f"{name}_{j}"] = LeafSpec(
+                (n_pages, page_size, K, hd),
+                ("pages", "page_slots", "kv_heads", "head_dim"),
+                init="zeros",
+            )
+    return jax.tree.map(
+        lambda s: stacked(n_periods, s),
+        block,
+        is_leaf=lambda x: isinstance(x, LeafSpec),
+    )
 
 
 def init_cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:

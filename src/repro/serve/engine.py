@@ -39,9 +39,26 @@ flash-tier residency via ``embodied.flash_tb(recycled=True)``.  Only
 tokens actually decoded are booked (early exit included).  Typed
 ``EnergyReport``s land in ``engine.reports[rid]``.
 
+Paged mode (``paged=True``, families with ``model.supports_paged``):
+the contiguous per-lane cache is replaced by a shared **page pool**
+(``serve/paging.py``) — each lane owns a list of fixed-size pages, so
+a skewed mixed-length bucket stops paying bucket-max padding in cache
+memory, and the ESE meter books resident bytes over *allocated pages
+only*.  Admission moves **inside** the decode loop: up to
+``stage_depth`` pending requests are pre-staged (they share the
+bucket's one ragged prefill; their prompt KV sits in pages, their
+first token waits on device), and the moment a lane dies (EOS /
+max_new) its pages return to a device-side free list and the next
+staged request takes the lane without leaving the ``while_loop`` —
+one host sync serves the whole super-bucket.  Outputs stay
+bit-identical to the contiguous engine and to solo serving (locked by
+tests/test_serve_paged.py).  Families that don't page (rwkv's O(1)
+state, SWA, MoE/hybrid/audio) silently fall back to the contiguous
+path.
+
 An optional ``mesh`` shards params (weight rule), caches (decode-cache
-rule) and the loop's per-sequence vectors (``serve_loop_spec``) via
-sharding/rules.py.
+rule, which also places the paged pool) and the loop's per-sequence
+vectors (``serve_loop_spec``) via sharding/rules.py.
 """
 from __future__ import annotations
 
@@ -57,6 +74,7 @@ from repro.core.ese.meter import MeterConfig, SustainabilityMeter
 from repro.core.ese.records import EnergyReport
 from repro.models import model
 from repro.models.common import greedy_sample, is_leaf_spec
+from repro.serve import paging
 
 
 @dataclass
@@ -81,6 +99,14 @@ class ServeStats:
     ttft_s: list[float] = field(default_factory=list)
     kv_bytes_full: int = 0          # fp bytes the caches would occupy
     kv_bytes_frac: int = 0          # bytes after the FRAC kbits dial
+    kv_bytes_peak: int = 0          # max concurrently-resident cache bytes
+                                    # (paged: the *allocated-pages* model
+                                    # the ESE meter books; contiguous:
+                                    # allocation == residency)
+    kv_bytes_pool: int = 0          # max physically provisioned bytes
+                                    # (paged: the pow2-rounded pool)
+    kv_pages_peak: int = 0          # paged: max pages live at once
+    admissions: int = 0             # paged: in-loop slot refills
 
 
 def build_decode_loop(mcfg: ModelConfig, *, eos_id: int | None = None,
@@ -137,16 +163,165 @@ def build_decode_loop(mcfg: ModelConfig, *, eos_id: int | None = None,
     return jax.jit(loop, donate_argnums=(1,))
 
 
+def build_paged_decode_loop(mcfg: ModelConfig, *, eos_id: int | None = None,
+                            kv_kbits: int | None = None, out_cap: int = 1,
+                            page_size: int = 16):
+    """Jitted paged decode with in-loop admission (the super-bucket).
+
+    Returns ``loop(params, pool, page_table, free_stack, free_top,
+    tok0, pos0, staged_tok0, staged_len, staged_pt, max_new) ->
+    (out (R, out_cap), n_out (R,), steps, pages_peak,
+    pages_per_req (R,), admissions, final pool)`` where ``R = B + Q``
+    requests (B decode lanes + Q pre-staged).  The pool is donated.
+
+    The carry holds, besides the contiguous loop's vectors, the page
+    table, the free-list stack, a lane→request map and the page
+    accounting scalars.  Each iteration: (1) lanes whose next write
+    crosses into an unallocated page pop one from the free stack
+    (``paging.alloc_pages``); (2) one ``model.decode_step_paged`` —
+    dead lanes' writes route to the trash page; (3) tokens land in
+    per-*request* output rows (a lane serves several requests over its
+    lifetime); (4) a per-lane maintenance pass frees dead lanes' pages
+    to the stack and admits the next staged request into the lane —
+    its prompt pages are already resident, its first token already
+    recorded, so admission is a handful of scalar writes and the
+    ``while_loop`` never leaves the device.  The loop exits only when
+    every lane is dead *and* the stage queue is drained.
+    """
+
+    def loop(params, pool, page_table, free_stack, free_top,
+             tok0, pos0, staged_tok0, staged_len, staged_pt, max_new):
+        B = tok0.shape[0]
+        Q = staged_tok0.shape[0]
+        R = B + Q
+        mp = page_table.shape[1]
+        rows_b = jnp.arange(B)
+        # request-indexed vectors get a trailing trash row R: dead
+        # lanes' predicated writes land there instead of branching
+        mn1 = jnp.concatenate([max_new, jnp.zeros((1,), jnp.int32)])
+        out = jnp.zeros((R + 1, out_cap), jnp.int32)
+        out = out.at[rows_b, 0].set(tok0)
+        n_out = jnp.zeros((R + 1,), jnp.int32).at[rows_b].set(1)
+        alive = 1 < max_new[:B]
+        if eos_id is not None:
+            alive = alive & (tok0 != eos_id)
+        ppr = jnp.concatenate([
+            (page_table > 0).sum(axis=1, dtype=jnp.int32),
+            (staged_pt > 0).sum(axis=1, dtype=jnp.int32),
+            jnp.zeros((1,), jnp.int32),
+        ])
+        in_use = ppr.sum()
+        c = dict(pool=pool, pt=page_table, fs=free_stack,
+                 ft=jnp.asarray(free_top, jnp.int32), tok=tok0, pos=pos0,
+                 alive=alive, lane=rows_b.astype(jnp.int32), out=out,
+                 n_out=n_out, sn=jnp.asarray(0, jnp.int32), in_use=in_use,
+                 peak=in_use, ppr=ppr, adm=jnp.asarray(0, jnp.int32),
+                 steps=jnp.asarray(0, jnp.int32))
+
+        def maintain(c):
+            """Free dead lanes' pages; refill each dead lane from the
+            stage queue (skipping straight past dead-on-arrival
+            requests, whose prompt pages bounce back to the stack)."""
+
+            def lane_fix(b, c):
+                row = c["pt"][b]
+                dead_own = (~c["alive"][b]) & (row[0] > 0)
+                row, fs, ft, n = paging.free_lane_pages(
+                    row, c["fs"], c["ft"], dead_own)
+                c = dict(c, pt=c["pt"].at[b].set(row), fs=fs, ft=ft,
+                         in_use=c["in_use"] - n)
+
+                def adm_cond(c):
+                    return (~c["alive"][b]) & (c["sn"] < Q)
+
+                def adm_body(c):
+                    qi = c["sn"]
+                    req = B + qi
+                    t0 = staged_tok0[qi]
+                    a = 1 < mn1[req]
+                    if eos_id is not None:
+                        a = a & (t0 != eos_id)
+                    srow, fs, ft, nf = paging.free_lane_pages(
+                        staged_pt[qi], c["fs"], c["ft"], ~a)
+                    return dict(
+                        c, pt=c["pt"].at[b].set(srow), fs=fs, ft=ft,
+                        tok=c["tok"].at[b].set(t0),
+                        pos=c["pos"].at[b].set(staged_len[qi]),
+                        alive=c["alive"].at[b].set(a),
+                        lane=c["lane"].at[b].set(req),
+                        out=c["out"].at[req, 0].set(t0),
+                        n_out=c["n_out"].at[req].set(1),
+                        sn=qi + 1, in_use=c["in_use"] - nf,
+                        adm=c["adm"] + 1)
+
+                if Q == 0:          # static: nothing staged to trace
+                    return c
+                return jax.lax.while_loop(adm_cond, adm_body, c)
+
+            return jax.lax.fori_loop(0, B, lane_fix, c)
+
+        def cond(c):
+            return c["alive"].any()
+
+        def body(c):
+            # 1. on-demand allocation for this step's KV writes
+            cols = jnp.clip(c["pos"] // page_size, 0, mp - 1)
+            need = c["alive"] & (c["pt"][rows_b, cols] < 0)
+            pt, ft, m = paging.alloc_pages(c["pt"], c["fs"], c["ft"],
+                                           need, cols)
+            ppr = c["ppr"].at[jnp.where(need, c["lane"], R)].add(
+                need.astype(jnp.int32))
+            in_use = c["in_use"] + m
+            peak = jnp.maximum(c["peak"], in_use)
+            # 2. one token for every lane
+            logits, pool = model.decode_step_paged(
+                mcfg, params, c["pool"], pt, c["tok"], c["pos"],
+                kv_kbits=kv_kbits, write_mask=c["alive"])
+            nxt = greedy_sample(logits)
+            # 3. emit into the lane's *request* row
+            rr = jnp.where(c["alive"], c["lane"], R)
+            out = c["out"].at[
+                rr, jnp.clip(c["n_out"][rr], 0, out_cap - 1)].set(nxt)
+            n_out = c["n_out"].at[rr].add(c["alive"].astype(jnp.int32))
+            alive = c["alive"] & (n_out[c["lane"]] < mn1[c["lane"]])
+            if eos_id is not None:
+                alive = alive & (nxt != eos_id)
+            tok = jnp.where(alive, nxt, c["tok"])
+            pos = c["pos"] + alive.astype(jnp.int32)
+            c = dict(c, pool=pool, pt=pt, ft=ft, tok=tok, pos=pos,
+                     alive=alive, out=out, n_out=n_out, in_use=in_use,
+                     peak=peak, ppr=ppr, steps=c["steps"] + 1)
+            # 4. free + refill (keeps cond() true while work remains)
+            return maintain(c)
+
+        # dead-on-arrival initial lanes must admit before the first
+        # cond() check, or a bucket of max_new=1 requests with a full
+        # stage queue would exit immediately
+        c = jax.lax.while_loop(cond, body, maintain(c))
+        return (c["out"][:R], c["n_out"][:R], c["steps"], c["peak"],
+                c["ppr"][:R], c["adm"], c["pool"])
+
+    return jax.jit(loop, donate_argnums=(1,))
+
+
 class ServeEngine:
     def __init__(self, mcfg: ModelConfig, params, *, max_batch: int = 8,
                  eos_id: int | None = None,
                  kv_frac_kbits: int | None = None,
                  meter: SustainabilityMeter | None = None,
-                 mesh=None):
+                 mesh=None, paged: bool = False, page_size: int = 16,
+                 stage_depth: int = 16):
         self.mcfg = mcfg
         self.max_batch = max_batch
         self.eos_id = eos_id
         self.kv_frac_kbits = kv_frac_kbits
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.page_size = page_size
+        self.stage_depth = max(0, stage_depth)
+        # families without an appendable KV cache fall back silently:
+        # same results, contiguous layout (documented in docs/serving.md)
+        self.paged = bool(paged) and model.supports_paged(mcfg)
         self.meter = meter or SustainabilityMeter(MeterConfig(), name="serve")
         self.reports: dict[int, EnergyReport] = {}
         self.mesh = mesh
@@ -196,32 +371,53 @@ class ServeEngine:
         return best[: self.max_batch]
 
     def run(self) -> dict[int, list[int]]:
-        """Serve until the pending queue is empty.  Requests submitted
-        between buckets join free slots at the next bucket boundary.
+        """Serve until the pending queue is empty.  Contiguous mode:
+        requests submitted between buckets join free slots at the next
+        bucket boundary.  Paged mode: each super-bucket drains up to
+        ``max_batch + stage_depth`` requests through in-loop admission.
         Returns {rid: tokens} for every completed request."""
         while self._pending:
-            self._serve_bucket(self._next_bucket())
+            if self.paged:
+                self._serve_paged_bucket()
+            else:
+                self._serve_bucket(self._next_bucket())
         return dict(self._results)
+
+    def _bucket_geometry(self, reqs: list[Request]):
+        """Shared bucket prep for both cache layouts: per-request
+        lengths, right-padded prompt matrix, per-request max_new
+        (clamped >= 1) and the decode horizon rounded up to a power of
+        two — per-lane max_new bounds emission inside the loop and
+        n_out trims the result, so the only effect of the rounding is
+        a bounded set of compiled loop variants instead of one
+        recompile per distinct max_new mix.  Byte accounting books the
+        *actual* horizon (``kv_bytes_peak``); the rounded allocation is
+        ``kv_bytes_pool``."""
+        lens = np.asarray([len(r.prompt) for r in reqs], np.int32)
+        S = int(lens.max())
+        max_new = np.asarray([max(1, r.max_new_tokens) for r in reqs],
+                             np.int32)
+        horizon = int(max_new.max())
+        out_cap = 1 << (horizon - 1).bit_length()
+        prompts = np.zeros((len(reqs), S), np.int32)
+        for i, r in enumerate(reqs):
+            prompts[i, : lens[i]] = r.prompt
+        return lens, S, max_new, horizon, out_cap, prompts
+
+    def _contig_cache_bytes(self, B: int, seq_len: int) -> int:
+        return sum(
+            int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+            for s in jax.tree.leaves(
+                model.cache_specs(self.mcfg, B, seq_len),
+                is_leaf=is_leaf_spec)
+            if jnp.issubdtype(s.dtype, jnp.floating))
 
     # -- one bucket ----------------------------------------------------------
     def _serve_bucket(self, bucket: list[Request]) -> None:
         B = len(bucket)
-        lens = np.asarray([len(r.prompt) for r in bucket], np.int32)
-        S = int(lens.max())
+        lens, S, max_new, horizon, out_cap, prompts = \
+            self._bucket_geometry(bucket)
         ragged = self._ragged_ok and bool((lens != S).any())
-        max_new = np.asarray([max(1, r.max_new_tokens) for r in bucket],
-                             np.int32)
-        # round the decode horizon (output buffer AND cache tail) up to
-        # a power of two: per-lane max_new bounds emission inside the
-        # loop and n_out trims the result, so the only effect is a
-        # bounded set of compiled loop variants instead of one recompile
-        # per distinct max_new mix.  Byte accounting below still books
-        # the *actual* horizon, not the rounded allocation.
-        horizon = int(max_new.max())
-        out_cap = 1 << (horizon - 1).bit_length()
-        prompts = np.zeros((B, S), np.int32)
-        for i, r in enumerate(bucket):
-            prompts[i, : lens[i]] = r.prompt
         batch = {"tokens": jnp.asarray(prompts)}
         if self.mcfg.family == "audio":
             batch["enc_embeds"] = jnp.zeros(
@@ -232,6 +428,16 @@ class ServeEngine:
             self.params, batch, jnp.asarray(lens) if ragged else None)
         self.stats.prefills += 1
         cache = self._grow_cache(cache, B, S + out_cap)
+        # the contiguous layout holds every lane at bucket-max for the
+        # whole bucket (the numbers the paged layout beats — bench_serve
+        # gates both ratios).  Symmetric with the paged side: peak =
+        # the actual horizon (resident model), pool = the pow2-rounded
+        # allocation (physical) — never-writable rounding tail excluded
+        # from peak on both layouts.
+        self.stats.kv_bytes_peak = max(self.stats.kv_bytes_peak,
+                                       self._contig_cache_bytes(B, S + horizon))
+        self.stats.kv_bytes_pool = max(self.stats.kv_bytes_pool,
+                                       self._contig_cache_bytes(B, S + out_cap))
         bucket_kv_frac = 0
         if self.kv_frac_kbits is not None:
             cache, bucket_kv_frac = self._frac_cache(cache, B, S + horizon)
@@ -263,10 +469,21 @@ class ServeEngine:
         self.stats.host_syncs += 1
         now = time.time()
         self.stats.decode_steps += int(steps_np)
-        bucket_dt = now - t_bucket0
+        self._finish_bucket(bucket, out_np, n_np, now, now - t_bucket0,
+                            lambda i: bucket_kv_frac // B)
+
+    def _finish_bucket(self, reqs, out_np, n_np, now, bucket_dt,
+                       kv_bytes_fn) -> None:
+        """Shared bucket-completion tail for both cache layouts:
+        results, token stats, per-request meter booking (the request's
+        token-share of bucket wall time plus its FRAC KV flash
+        residency slice — early exit books only the tokens actually
+        decoded), and the pending-queue drain.  ``kv_bytes_fn(i)`` is
+        request ``i``'s FRAC KV bytes: its per-lane share of the grown
+        contiguous cache, or its own allocated pages when paged."""
         total_toks = int(n_np.sum()) or 1
         done_ids = set()
-        for i, r in enumerate(bucket):
+        for i, r in enumerate(reqs):
             ntok = int(n_np[i])
             r.output = [int(t) for t in out_np[i, :ntok]]
             r.done = True
@@ -274,15 +491,135 @@ class ServeEngine:
             done_ids.add(r.rid)
             self._results[r.rid] = r.output
             self.stats.tokens += ntok
-            # sustainability: this request's token-share of the bucket's
-            # wall time, plus its slice of the FRAC KV flash residency.
-            # Early exit books only the tokens actually decoded.
             self.reports[r.rid] = self.meter.request(
                 ntok, bucket_dt * ntok / total_toks,
-                rid=r.rid, kv_frac_bytes=bucket_kv_frac // B,
+                rid=r.rid, kv_frac_bytes=kv_bytes_fn(i),
                 kv_occupancy_s=bucket_dt,
             )
         self._pending = [p for p in self._pending if p.rid not in done_ids]
+
+    # -- one paged super-bucket ----------------------------------------------
+    def _serve_paged_bucket(self) -> None:
+        """Serve up to ``max_batch`` lanes plus ``stage_depth`` staged
+        requests through one prefill, one while_loop, one host sync.
+
+        All R requests share one ragged right-padded prefill (per-lane
+        numerics are batch-independent, so this is bit-identical to
+        prefilling each alone); every request's prompt KV is scattered
+        into its pages and its first token staged on device.  The loop
+        then decodes B lanes, refilling each dead lane from the stage
+        queue in-loop (see build_paged_decode_loop).  Byte accounting
+        books *allocated pages only* — the per-request ``EnergyReport``
+        carries its own pages' FRAC bytes, and ``stats.kv_bytes_peak``
+        tracks the true high-water mark of concurrently live pages.
+        """
+        from repro.kernels.frac_pack import ops as fops
+
+        nb = min(self.max_batch, len(self._pending))
+        reqs = self._pending[: nb + self.stage_depth]
+        staged_n = len(reqs) - nb
+        lens, S, max_new, _, out_cap, prompts = self._bucket_geometry(reqs)
+        t_bucket0 = time.time()
+        tok0, cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(prompts)}, jnp.asarray(lens))
+        self.stats.prefills += 1
+        if self.kv_frac_kbits is not None:
+            # same slot-granular fake-quant as the contiguous FRAC tier
+            # (one scale per (K, hd) row) — page layout changes where
+            # bytes LIVE, never a lane's numerics
+            cache = jax.tree.map(
+                lambda leaf: fops.fake_quant_slots(
+                    leaf, self.kv_frac_kbits, row_dims=2),
+                cache)
+        # pow2=True bounds the compiled loop variants (pool + table
+        # shapes round up; spare pages idle on the free stack) — B and
+        # Q are already bounded by max_batch / stage_depth, out_cap by
+        # its own rounding
+        plan = paging.plan_pages(lens, max_new, nb, self.page_size,
+                                 pow2=True)
+        full_table = np.concatenate([plan.page_table, plan.staged_pt])
+        pi, oi = paging.pool_scatter_indices(
+            full_table, lens, S, plan.n_pages, self.page_size)
+        pool_specs = model.paged_pool_specs(
+            self.mcfg, plan.n_pages, self.page_size)
+        pi, oi = jnp.asarray(pi), jnp.asarray(oi)
+        pool = jax.tree.map(
+            lambda spec, leaf: paging.fill_pool(
+                jnp.zeros(spec.shape, leaf.dtype), leaf, pi, oi),
+            pool_specs, cache, is_leaf=is_leaf_spec)
+        pt = jnp.asarray(plan.page_table)
+        spt = jnp.asarray(plan.staged_pt)
+        fs = jnp.asarray(plan.free_stack)
+        pos0 = jnp.asarray(lens[:nb])
+        slen = jnp.asarray(lens[nb:])
+        mn = jnp.asarray(max_new)
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding
+
+            from repro.sharding import rules
+
+            pool = jax.device_put(
+                pool, rules.cache_shardings(pool_specs, self.mesh, nb))
+            rep = NamedSharding(self.mesh, rules.serve_paged_spec(self.mesh))
+            pt, spt, fs, pos0, slen, mn = jax.device_put(
+                (pt, spt, fs, pos0, slen, mn), (rep,) * 6)
+        tok0.block_until_ready()
+        t_first = time.time()
+        for r in reqs:
+            r.t_first = t_first
+            self.stats.ttft_s.append(t_first - r.t_submit)
+        loop = self._get_paged_loop(out_cap)
+        out, n_out, steps, peak, ppr, adm, _ = loop(
+            self.params, pool, pt, fs, np.int32(plan.free_top),
+            tok0[:nb], pos0, tok0[nb:], slen, spt, mn)
+        # the super-bucket's single host transfer
+        out_np, n_np, steps_np, peak_np, ppr_np, adm_np = jax.device_get(
+            (out, n_out, steps, peak, ppr, adm))
+        self.stats.host_syncs += 1
+        now = time.time()
+        self.stats.decode_steps += int(steps_np)
+        self.stats.admissions += int(adm_np)
+        assert int(adm_np) == staged_n, "stage queue not drained in-loop"
+        page_full_b, page_frac_b = self._page_bytes()
+        self.stats.kv_pages_peak = max(self.stats.kv_pages_peak,
+                                       int(peak_np))
+        self.stats.kv_bytes_peak = max(self.stats.kv_bytes_peak,
+                                       int(peak_np) * page_full_b)
+        self.stats.kv_bytes_pool = max(self.stats.kv_bytes_pool,
+                                       plan.n_pages * page_full_b)
+        kv_bytes_fn = lambda i: 0
+        if self.kv_frac_kbits is not None:
+            pages_total = int(ppr_np.sum())
+            self.stats.kv_bytes_full += pages_total * page_full_b
+            self.stats.kv_bytes_frac += pages_total * page_frac_b
+            kv_bytes_fn = lambda i: int(ppr_np[i]) * page_frac_b
+        self._finish_bucket(reqs, out_np, n_np, now, now - t_bucket0,
+                            kv_bytes_fn)
+
+    def _page_bytes(self) -> tuple[int, int]:
+        """(full, frac) resident bytes per allocated page, summed over
+        every layer's k/v pool leaf — frac books each page as its own
+        FRAC stream (``ops.compressed_nbytes_pages``)."""
+        from repro.kernels.frac_pack import ops as fops
+
+        specs = model.paged_pool_specs(self.mcfg, 2, self.page_size)
+        full = frac = 0
+        for s in jax.tree.leaves(specs, is_leaf=is_leaf_spec):
+            layers = s.shape[0]
+            elems = int(np.prod(s.shape[2:]))    # one page, one layer
+            full += layers * elems * jnp.dtype(s.dtype).itemsize
+            if self.kv_frac_kbits is not None:
+                frac += layers * fops.compressed_nbytes_pages(
+                    1, elems, self.kv_frac_kbits)
+        return full, frac
+
+    def _get_paged_loop(self, out_cap: int):
+        key = ("paged", out_cap)
+        if key not in self._loops:
+            self._loops[key] = build_paged_decode_loop(
+                self.mcfg, eos_id=self.eos_id, kv_kbits=self.kv_frac_kbits,
+                out_cap=out_cap, page_size=self.page_size)
+        return self._loops[key]
 
     # -- pieces --------------------------------------------------------------
     def _prefill_fn(self, params, batch, lengths):

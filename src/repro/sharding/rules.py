@@ -108,7 +108,15 @@ def batch_axes(mesh: Mesh, global_batch: int) -> tuple[str, ...]:
 def cache_spec(
     shape: tuple[int, ...], dims: tuple[str, ...], mesh: Mesh, global_batch: int
 ) -> P:
-    """Decode-cache rule (see module docstring)."""
+    """Decode-cache rule (see module docstring).
+
+    Also places the paged KV pool (serve/paging.py): a pool leaf has no
+    batch dim — its ``pages`` axis plays the role of ``kv_seq`` (shard
+    the page pool over idle axes when ``kv_heads`` doesn't divide TP).
+    The page *table* / free list are tiny int32 vectors and stay
+    replicated (``serve_paged_spec``): every shard gathers through the
+    same table, so the pool's pages axis is the only sharded state.
+    """
     assign: list[Any] = [None] * len(shape)
     baxes = batch_axes(mesh, global_batch)
     used: set[str] = set()
@@ -119,7 +127,8 @@ def cache_spec(
             break
     tp = _axis_size(mesh, "model")
     kvh = next((i for i, d in enumerate(dims) if d == "kv_heads"), None)
-    kvs = next((i for i, d in enumerate(dims) if d == "kv_seq"), None)
+    kvs = next((i for i, d in enumerate(dims)
+                if d in ("kv_seq", "pages")), None)
     if kvh is not None and tp > 1 and shape[kvh] % tp == 0:
         assign[kvh] = "model"
         used.add("model")
@@ -157,6 +166,16 @@ def serve_loop_spec(mesh: Mesh, batch: int) -> tuple[P, P]:
     baxes = batch_axes(mesh, batch)
     b = (baxes if len(baxes) > 1 else baxes[0]) if baxes else None
     return P(b), P(b, None)
+
+
+def serve_paged_spec(mesh: Mesh) -> P:
+    """PartitionSpec for the paged engine's allocator state (page
+    table, staged tables, free-list stack, per-lane vectors): fully
+    replicated.  They are O(pages) int32 — a few KB — and every model
+    shard reads the same table to gather its slice of the pool, so
+    replication is both correct and free."""
+    del mesh
+    return P()
 
 
 def input_sharding(mesh: Mesh, shape, dims, global_batch: int) -> NamedSharding:

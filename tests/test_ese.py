@@ -182,6 +182,58 @@ def test_serve_meter_books_only_decoded_tokens():
         sum(r.operational_j for r in eng.reports.values()))
 
 
+def test_paged_serve_books_allocated_pages_only():
+    """Paged FRAC KV golden: ``kv_bytes_frac`` equals the codec's
+    ``compressed_nbytes`` summed over *allocated pages only* (each page
+    an independent packed stream), strictly below what the bucket-max
+    contiguous layout books for the same skewed bucket — the honest
+    resident-bytes number behind the flash-tier embodied charge."""
+    import jax
+
+    from repro.configs import get_tiny
+    from repro.kernels.frac_pack import ops as fops
+    from repro.models import model
+    from repro.models.common import is_leaf_spec
+    from repro.serve.engine import ServeEngine
+    from repro.serve.paging import pages_for
+
+    mcfg = get_tiny("llama3.2-3b")
+    params = model.init_params(mcfg, jax.random.PRNGKey(0))
+    ps, kbits = 16, 8
+    plens, max_new = [4, 24], [4, 8]
+    eng = ServeEngine(mcfg, params, max_batch=2, paged=True, page_size=ps,
+                      kv_frac_kbits=kbits)
+    rids = [eng.submit(np.arange(1, 1 + n, dtype=np.int32), max_new_tokens=m)
+            for n, m in zip(plens, max_new)]
+    res = eng.run()
+    # per-page stream bytes over every layer's k/v pool leaf
+    specs = model.paged_pool_specs(mcfg, 2, ps)
+    page_frac = page_full = 0
+    for s in jax.tree.leaves(specs, is_leaf=is_leaf_spec):
+        elems = int(np.prod(s.shape[2:]))
+        page_frac += s.shape[0] * fops.compressed_nbytes_pages(1, elems, kbits)
+        page_full += s.shape[0] * elems * 2                  # bf16
+    # pages a request actually allocated: prompt pages grown by the
+    # decode writes it made (its last KV row is len + emitted - 2)
+    pages = [max(pages_for(n, ps), pages_for(n + len(res[r]) - 1, ps))
+             for n, r in zip(plens, rids)]
+    assert eng.stats.kv_bytes_frac == sum(pages) * page_frac
+    assert eng.stats.kv_bytes_full == sum(pages) * page_full
+    for r, npages in zip(rids, pages):
+        assert eng.reports[r].detail["kv_frac_bytes"] == npages * page_frac
+    assert "nand-tb" in eng.meter.footprint.by_unit
+    # strictly below the contiguous bucket-max accounting for the same
+    # skewed bucket (what the PR 4 engine would book)
+    S, horizon = max(plens), max(max_new)
+    contig_specs = model.cache_specs(mcfg, len(plens), S + horizon)
+    contig_frac = sum(
+        fops.compressed_nbytes(int(np.prod(s.shape)), kbits)
+        for s in jax.tree.leaves(contig_specs, is_leaf=is_leaf_spec))
+    assert eng.stats.kv_bytes_frac < contig_frac
+    assert eng.stats.kv_bytes_peak < len(plens) * (S + horizon) * (
+        page_full // ps)
+
+
 def test_latency_head_on_synthetic_records():
     rng = np.random.default_rng(0)
     recs = []

@@ -1,0 +1,316 @@
+"""Differential harness for the paged serve engine.
+
+Three layers of lock:
+
+1. **Allocator properties** (hypothesis, shim-compatible): arbitrary
+   admit/grow/finish interleavings driven through the *same* jnp
+   primitives the jitted decode loop uses (``paging.alloc_pages`` /
+   ``free_lane_pages``) preserve free-list conservation, never alias a
+   page across live sequences, and never hand out the trash page.
+2. **Differential serving**: a paged mixed-length bucket is
+   bit-identical per request to the PR 4 contiguous engine AND to solo
+   serving — llama with and without FRAC KV, rwkv via the documented
+   contiguous fallback.
+3. **In-loop admission oracle**: the same request trace replayed
+   through the bucket-boundary engine yields identical per-request
+   token streams, while the paged super-bucket uses strictly fewer
+   host syncs and strictly less peak resident KV than the contiguous
+   bucket-max layout.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_tiny
+from repro.models import model
+from repro.serve import paging
+from repro.serve.engine import ServeEngine
+
+ARCH = "llama3.2-3b"
+
+
+def _params(arch=ARCH):
+    return model.init_params(get_tiny(arch), jax.random.PRNGKey(0))
+
+
+def _serve(mcfg, params, prompts, max_new, **kw):
+    eng = ServeEngine(mcfg, params, **kw)
+    rids = [eng.submit(p, max_new_tokens=n) for p, n in zip(prompts, max_new)]
+    res = eng.run()
+    return eng, [res[r] for r in rids]
+
+
+# ---------------------------------------------------------------------------
+# 1. page-allocator property suite
+# ---------------------------------------------------------------------------
+
+
+class _AllocDriver:
+    """Host mirror of the in-loop allocator: one page table, the same
+    stack primitives, plus a model of what the engine guarantees (a
+    lane never grows past its horizon, the pool is sized for the
+    no-reuse worst case, so the stack cannot underflow)."""
+
+    def __init__(self, n_lanes: int, max_pages: int):
+        self.n_lanes, self.max_pages = n_lanes, max_pages
+        self.n_pages = 1 + n_lanes * max_pages        # +1: trash page 0
+        self.pt = jnp.full((n_lanes, max_pages), -1, jnp.int32)
+        self.fs = jnp.zeros((self.n_pages,), jnp.int32)
+        self.fs = self.fs.at[: self.n_pages - 1].set(
+            jnp.arange(1, self.n_pages, dtype=jnp.int32))
+        self.ft = jnp.asarray(self.n_pages - 1, jnp.int32)
+
+    def grow(self, lane: int) -> bool:
+        col = int((np.asarray(self.pt[lane]) >= 0).sum())
+        if col >= self.max_pages:
+            return False                               # lane at horizon
+        need = jnp.zeros((self.n_lanes,), bool).at[lane].set(True)
+        cols = jnp.full((self.n_lanes,), col, jnp.int32)
+        self.pt, self.ft, m = paging.alloc_pages(
+            self.pt, self.fs, self.ft, need, cols)
+        assert int(m) == 1
+        return True
+
+    def finish(self, lane: int):
+        row, self.fs, self.ft, _ = paging.free_lane_pages(
+            self.pt[lane], self.fs, self.ft, jnp.asarray(True))
+        self.pt = self.pt.at[lane].set(row)
+
+    def check(self):
+        pt = np.asarray(self.pt)
+        ft = int(self.ft)
+        live = pt[pt >= 0]
+        free = np.asarray(self.fs)[:ft]
+        # never the trash page, never out of range
+        assert (live > 0).all() and (live < self.n_pages).all()
+        assert (free > 0).all() and (free < self.n_pages).all()
+        # no page aliased across live rows, none both live and free
+        assert len(set(live.tolist())) == live.size, "double allocation"
+        assert len(set(free.tolist())) == free.size, "double free"
+        assert not set(live.tolist()) & set(free.tolist())
+        # conservation: every non-trash page is live xor free
+        assert ft + live.size == self.n_pages - 1
+        assert set(live.tolist()) | set(free.tolist()) \
+            == set(range(1, self.n_pages))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(1, 4), st.integers(1, 5))
+def test_page_allocator_properties(seed, n_lanes, max_pages):
+    import random
+
+    rnd = random.Random(seed)
+    drv = _AllocDriver(n_lanes, max_pages)
+    drv.check()
+    for _ in range(40):
+        lane = rnd.randrange(n_lanes)
+        if rnd.random() < 0.65:
+            drv.grow(lane)
+        else:
+            drv.finish(lane)
+        drv.check()
+    for lane in range(n_lanes):                       # drain everything
+        drv.finish(lane)
+    drv.check()
+    assert int(drv.ft) == drv.n_pages - 1             # all pages returned
+
+
+def test_alloc_assigns_in_lane_order_and_free_roundtrips():
+    drv = _AllocDriver(3, 2)
+    need = jnp.asarray([True, False, True])
+    cols = jnp.zeros((3,), jnp.int32)
+    pt, ft, m = paging.alloc_pages(drv.pt, drv.fs, drv.ft, need, cols)
+    assert int(m) == 2 and int(ft) == int(drv.ft) - 2
+    got = np.asarray(pt)[:, 0]
+    assert got[1] == -1 and got[0] != got[2] and (got[[0, 2]] > 0).all()
+    # freeing a lane returns exactly its pages, clears the row
+    row, fs, ft2, n = paging.free_lane_pages(
+        pt[0], drv.fs, ft, jnp.asarray(True))
+    assert int(n) == 1 and int(ft2) == int(ft) + 1
+    assert (np.asarray(row) == -1).all()
+    assert int(np.asarray(fs)[int(ft)]) == int(got[0])
+    # disabled free is a no-op
+    row3, _, ft3, n3 = paging.free_lane_pages(
+        pt[2], drv.fs, ft, jnp.asarray(False))
+    assert int(n3) == 0 and int(ft3) == int(ft)
+    assert (np.asarray(row3) == np.asarray(pt[2])).all()
+
+
+def test_plan_pages_layout():
+    plan = paging.plan_pages([5, 17, 3], [4, 8, 1], 2, page_size=4)
+    # prompt pages 2+5+1 = 8; growth (horizon - prompt) = [1, 2, 0],
+    # top-2 = 3 -> P = 1 + 8 + 3 (tight: only 2 lanes decode at once)
+    assert plan.n_pages == 12 and plan.max_pages == 7
+    assert plan.page_table.shape == (2, 7)
+    assert plan.staged_pt.shape == (1, 7)
+    assert list(plan.prompt_pages) == [2, 5, 1]
+    ids = np.concatenate([plan.page_table[plan.page_table > 0],
+                          plan.staged_pt[plan.staged_pt > 0]])
+    assert sorted(ids.tolist()) == list(range(1, 9))   # prompt pages
+    assert plan.free_top == plan.n_pages - 1 - ids.size
+    free = plan.free_stack[: plan.free_top]
+    assert sorted(free.tolist()) == list(range(9, 12))
+    # pow2 rounding only adds spare pages to the free stack
+    p2 = paging.plan_pages([5, 17, 3], [4, 8, 1], 2, page_size=4, pow2=True)
+    assert p2.n_pages == 16 and p2.max_pages == 8
+    assert p2.free_top == p2.n_pages - 1 - ids.size
+    assert (p2.page_table[:, :7] == plan.page_table).all()
+    # provisioning is tight: deeper queues stop paying the no-reuse
+    # worst case (10 one-page prompts behind 2 lanes: 11+2, not 21)
+    deep = paging.plan_pages([2] * 10, [8] * 10, 2, page_size=4)
+    assert deep.n_pages == 1 + 10 + 2 * 2
+    assert deep.n_pages < 1 + 10 * 3
+
+
+def test_pool_scatter_routes_pad_rows_to_nowhere():
+    full_table = np.asarray([[1, 2, -1], [3, -1, -1]], np.int32)
+    pi, oi = paging.pool_scatter_indices(
+        full_table, [6, 2], seq_len=8, n_pages=4, page_size=4)
+    pi, oi = pi.reshape(2, 8), oi.reshape(2, 8)
+    assert pi[0, :4].tolist() == [1] * 4 and pi[0, 4:6].tolist() == [2, 2]
+    assert pi[0, 6:].tolist() == [4, 4]               # pad rows dropped
+    assert pi[1, :2].tolist() == [3, 3] and (pi[1, 2:] == 4).all()
+    assert oi[0].tolist() == [0, 1, 2, 3, 0, 1, 2, 3]
+    pool = jnp.zeros((1, 4, 4, 1, 1), jnp.float32)
+    leaf = jnp.arange(16, dtype=jnp.float32).reshape(1, 2, 8, 1, 1)
+    filled = paging.fill_pool(pool, leaf, jnp.asarray(pi.reshape(-1)),
+                              jnp.asarray(oi.reshape(-1)))
+    got = np.asarray(filled)[0, :, :, 0, 0]
+    assert got[1].tolist() == [0, 1, 2, 3]            # lane 0 page 0
+    assert got[2].tolist() == [4, 5, 0, 0]            # lane 0 page 1 head
+    assert got[3].tolist() == [8, 9, 0, 0]            # lane 1 page 0 head
+    assert (got[0] == 0).all()                        # trash page untouched
+
+
+def test_gather_pages_restores_logical_order():
+    from repro.models.common import gather_pages
+
+    pool = jnp.arange(4 * 2 * 1 * 1, dtype=jnp.float32).reshape(4, 2, 1, 1)
+    table = jnp.asarray([[3, 1], [2, -1]], jnp.int32)
+    got = np.asarray(gather_pages(pool, table))[:, :, 0, 0]
+    assert got[0].tolist() == [6.0, 7.0, 2.0, 3.0]
+    assert got[1, :2].tolist() == [4.0, 5.0]          # tail rows are masked
+
+
+# ---------------------------------------------------------------------------
+# 2. differential: paged == contiguous == solo
+# ---------------------------------------------------------------------------
+
+PROMPTS = [np.arange(1, 6, dtype=np.int32),
+           np.arange(2, 12, dtype=np.int32),
+           np.arange(3, 10, dtype=np.int32)]
+MAX_NEW = [3, 6, 5]
+
+
+@pytest.mark.parametrize("kbits", [None, 8])
+def test_paged_bit_identical_to_contiguous_and_solo(kbits):
+    mcfg = get_tiny(ARCH)
+    params = _params()
+    contig, res_c = _serve(mcfg, params, PROMPTS, MAX_NEW,
+                           max_batch=4, kv_frac_kbits=kbits)
+    eng, res_p = _serve(mcfg, params, PROMPTS, MAX_NEW, max_batch=4,
+                        kv_frac_kbits=kbits, paged=True, page_size=4)
+    assert eng.paged and eng.stats.prefills == 1
+    assert res_p == res_c, f"paged vs contiguous diverged (kbits={kbits})"
+    for p, n, toks in zip(PROMPTS, MAX_NEW, res_p):
+        solo, (ref,) = _serve(mcfg, params, [p], [n], max_batch=1,
+                              kv_frac_kbits=kbits)
+        assert toks == ref, f"paged vs solo diverged (kbits={kbits})"
+        assert len(toks) == n
+
+
+def test_paged_page_size_invariance():
+    """The page size is a layout knob, never a numerics knob."""
+    mcfg = get_tiny(ARCH)
+    params = _params()
+    outs = []
+    for ps in (2, 4, 16):
+        _, res = _serve(mcfg, params, PROMPTS, MAX_NEW, max_batch=4,
+                        paged=True, page_size=ps)
+        outs.append(res)
+    assert outs[0] == outs[1] == outs[2]
+
+
+def test_paged_falls_back_for_state_space_families():
+    """rwkv has an O(1) recurrent state — nothing to page.  The flag
+    degrades to the contiguous engine with identical results."""
+    mcfg = get_tiny("rwkv6-1.6b")
+    params = _params("rwkv6-1.6b")
+    eng_p, res_p = _serve(mcfg, params, PROMPTS, MAX_NEW, max_batch=4,
+                          paged=True)
+    eng_c, res_c = _serve(mcfg, params, PROMPTS, MAX_NEW, max_batch=4)
+    assert not eng_p.paged
+    assert res_p == res_c
+    assert eng_p.stats.admissions == 0 and eng_p.stats.kv_pages_peak == 0
+
+
+def test_paged_eos_early_exit_and_doa_requests():
+    """EOS kills a lane mid-loop (pages freed, next request admitted)
+    and a max_new=1 request completes through staging without ever
+    decoding."""
+    mcfg = get_tiny(ARCH)
+    params = _params()
+    probe, (ref,) = _serve(mcfg, params, [np.arange(1, 9, dtype=np.int32)],
+                           [8], max_batch=1)
+    eos = ref[-1]
+    want = ref[: ref.index(eos) + 1]
+    prompts = [np.arange(1, 9, dtype=np.int32),
+               np.arange(2, 10, dtype=np.int32),
+               np.arange(3, 11, dtype=np.int32)]
+    eng, (o1, o2, o3) = _serve(mcfg, params, prompts, [8, 2, 1],
+                               max_batch=1, paged=True, page_size=4,
+                               eos_id=eos)
+    assert o1 == want
+    assert len(o2) <= 2 and len(o3) == 1
+    assert eng.stats.host_syncs == 1          # one super-bucket
+    assert eng.stats.admissions == 2          # both refills in-loop
+    assert eng.stats.tokens == len(o1) + len(o2) + len(o3)
+
+
+# ---------------------------------------------------------------------------
+# 3. in-loop admission oracle vs the bucket-boundary engine
+# ---------------------------------------------------------------------------
+
+
+def test_in_loop_admission_oracle():
+    """Replay one trace through both engines: identical per-request
+    streams, strictly fewer host syncs (one super-bucket vs one sync
+    per bucket), and strictly less peak resident KV than bucket-max."""
+    mcfg = get_tiny(ARCH)
+    params = _params()
+    rng = np.random.default_rng(7)
+    plens = [4, 6, 48, 5, 8, 6]                # skewed: one long anchor
+    prompts = [rng.integers(1, mcfg.vocab_size, p).astype(np.int32)
+               for p in plens]
+    max_new = [8, 6, 8, 4, 8, 5]
+    contig, res_c = _serve(mcfg, params, prompts, max_new, max_batch=2)
+    paged, res_p = _serve(mcfg, params, prompts, max_new, max_batch=2,
+                          paged=True, page_size=4, stage_depth=8)
+    assert res_p == res_c                      # identical token streams
+    assert [len(t) for t in res_p] == max_new
+    # admission happened inside the loop, not at bucket boundaries
+    assert paged.stats.host_syncs == 1 == paged.stats.prefills
+    assert contig.stats.host_syncs == 3 == contig.stats.prefills
+    assert paged.stats.host_syncs < contig.stats.host_syncs
+    assert paged.stats.admissions == len(prompts) - paged.max_batch
+    # paged peak strictly below the contiguous bucket-max layout
+    assert 0 < paged.stats.kv_bytes_peak < contig.stats.kv_bytes_peak
+    # conservation held end-to-end: the loop's high-water mark can
+    # never exceed the no-reuse worst case the plan provisioned
+    assert paged.stats.kv_pages_peak <= sum(
+        paging.pages_for(p + m, 4) for p, m in zip(plens, max_new))
+
+
+def test_paged_solo_degenerates_to_single_lane():
+    """B=1, no staged requests: the paged loop is just a solo decode
+    with a page table — results identical, one sync."""
+    mcfg = get_tiny(ARCH)
+    params = _params()
+    solo, (ref,) = _serve(mcfg, params, [PROMPTS[1]], [6], max_batch=1)
+    eng, (got,) = _serve(mcfg, params, [PROMPTS[1]], [6], max_batch=1,
+                         paged=True, page_size=4)
+    assert got == ref
+    assert eng.stats.admissions == 0 and eng.stats.host_syncs == 1

@@ -169,6 +169,44 @@ def test_serve_decode_is_device_resident(monkeypatch):
     assert "while" in str(jaxpr)
 
 
+def test_serve_paged_decode_is_device_resident(monkeypatch):
+    """The paged super-bucket keeps the host-sync lock: exactly one
+    transfer for the whole trace even though admission happens
+    mid-decode, and the paged loop still lowers to a while primitive
+    (allocation, freeing and slot refill never bounce through Python)."""
+    from repro.models import model as m
+    from repro.serve import paging
+    from repro.serve.engine import build_paged_decode_loop
+    mcfg = get_tiny(ARCH)
+    params = m.init_params(mcfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(mcfg, params, max_batch=2, paged=True, page_size=4)
+    eng.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=6)
+    eng.submit(np.arange(2, 10, dtype=np.int32), max_new_tokens=6)
+    eng.submit(np.arange(3, 8, dtype=np.int32), max_new_tokens=4)
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get",
+                        lambda x: (calls.append(1), real(x))[1])
+    res = eng.run()
+    assert len(res) == 3 and eng.stats.admissions == 1
+    assert eng.stats.prefills == 1
+    assert len(calls) == 1                  # one transfer, whole trace
+    assert eng.stats.host_syncs == 1
+    # jaxpr: the decode+admission phase is a device-resident while loop
+    loop = build_paged_decode_loop(mcfg, out_cap=4, page_size=4)
+    plan = paging.plan_pages([8, 8, 5], [4, 4, 4], 2, 4)
+    aparams = m.abstract_params(mcfg)
+    apool = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        m.paged_pool_specs(mcfg, plan.n_pages, 4),
+        is_leaf=lambda x: hasattr(x, "dims"))
+    i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    jaxpr = jax.make_jaxpr(loop)(
+        aparams, apool, i32(2, plan.max_pages), i32(plan.n_pages), i32(),
+        i32(2), i32(2), i32(1), i32(1), i32(1, plan.max_pages), i32(3))
+    assert "while" in str(jaxpr)
+
+
 def test_serve_ttft_from_submit_and_queue_drain():
     """TTFT is measured from each request's own submit time, and
     completed requests drain out of the pending queue (sustained load
