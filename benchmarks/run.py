@@ -3,6 +3,7 @@
 Prints ``name,value,derived`` CSV rows.  Mapping to the paper:
 
   bench_frac             Fig 2(c), Fig 2(d), Fig 6, codec throughput
+  bench_frac_capacity    Fig 2(d) lifetime: m-ladder vs MLC->SLC cliff
   bench_progress_carbon  Fig 5 right (forward progress), Fig 5 left (Pareto)
   bench_ese_wind         Fig 7 (LSTM wind prediction)
   bench_kernels          §II-A NTT / SHA3 workloads
@@ -41,6 +42,7 @@ def main(argv: list[str] | None = None) -> None:
         bench_ese_estimates,
         bench_ese_wind,
         bench_frac,
+        bench_frac_capacity,
         bench_kernels,
         bench_progress_carbon,
         bench_roofline,
@@ -49,6 +51,7 @@ def main(argv: list[str] | None = None) -> None:
 
     modules = [
         ("frac", bench_frac),
+        ("frac_capacity", bench_frac_capacity),
         ("progress_carbon", bench_progress_carbon),
         ("ese_wind", bench_ese_wind),
         ("kernels", bench_kernels),

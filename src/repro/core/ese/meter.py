@@ -58,6 +58,10 @@ class _Totals:
     avoided_pause_j: float = 0.0
     avoided_derate_j: float = 0.0
     avoided_co2_kg: float = 0.0
+    flash_reads: int = 0         # physical flash pages sensed (spill tier)
+    flash_writes: int = 0        # flash pages programmed
+    flash_erases: int = 0        # block erases
+    flash_op_j: float = 0.0      # read/program/erase energy booked
 
 
 class SustainabilityMeter:
@@ -235,6 +239,24 @@ class SustainabilityMeter:
                    "kv_frac_bytes": int(kv_frac_bytes)},
         )
 
+    def flash_io(self, op_j: float, *, reads: int = 0, writes: int = 0,
+                 erases: int = 0, tb_s: float = 0.0) -> None:
+        """Book one batch of recycled-flash spill-tier I/O (the paged
+        serve engine drains its FlashTier once per super-bucket):
+        device-level read/program/erase energy priced from wear.py's
+        per-page constants, plus the spilled bytes' embodied share —
+        residency in TB·s through ``embodied.flash_tb(recycled=True)``,
+        the same amortization the FRAC KV option uses.  Wall time is
+        not advanced: flash I/O overlaps the serving intervals already
+        booked per request."""
+        intensity = self.carbon_intensity()
+        self.footprint.charge(embodied.flash_tb(recycled=True), tb_s, op_j)
+        self.totals.co2_operational_kg += op_j / 3.6e6 * intensity
+        self.totals.flash_reads += int(reads)
+        self.totals.flash_writes += int(writes)
+        self.totals.flash_erases += int(erases)
+        self.totals.flash_op_j += op_j
+
     # -- reports -------------------------------------------------------------
     def report(self, name: str | None = None) -> EnergyReport:
         """Cumulative EnergyReport for everything metered so far,
@@ -249,6 +271,12 @@ class SustainabilityMeter:
                 "tokens": t.tokens,
                 "requests": t.requests,
                 "by_unit": fp.by_unit,
+                "flash": {
+                    "reads": t.flash_reads,
+                    "writes": t.flash_writes,
+                    "erases": t.flash_erases,
+                    "op_j": t.flash_op_j,
+                },
                 "scheduler": {
                     "paused_steps": t.paused_steps,
                     "derated_steps": t.derated_steps,

@@ -45,6 +45,20 @@ class DegradationPolicy:
         return True
 
 
+def erase_block(block: FlashBlock, policy: DegradationPolicy | None) -> dict:
+    """One erase cycle on a (drained) block: wear it, then run the
+    graceful-degradation check — the serve tier's and the capacity
+    bench's shared erase-time hook.  ``policy=None`` models the fixed-m
+    baseline: the block simply retires at the ECC budget."""
+    block.program_erase(1.0)
+    stepped = False
+    if policy is not None:
+        stepped = policy.maybe_degrade(block)
+    elif block.rber() > ECC_LIMIT:
+        block.retired = True
+    return {"stepped": stepped, "retired": block.retired, "m": block.m}
+
+
 def simulate_lifetime(
     chip: RecycledChip,
     policy: DegradationPolicy | None,

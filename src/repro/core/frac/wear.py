@@ -55,6 +55,7 @@ T_PULSE_US = 140.0          # one ISPP program pulse + verify
 T_ERASE_US = 3000.0
 E_SENSE_NJ = 35.0           # per-page energy per sense iteration
 E_PULSE_NJ = 220.0
+E_ERASE_NJ = 1800.0         # whole-block erase pulse
 
 
 def read_iterations(m: int) -> int:
@@ -83,6 +84,12 @@ def page_program_energy_j(m: int) -> float:
     return program_pulses(m) * E_PULSE_NJ * 1e-9
 
 
+def block_erase_energy_j() -> float:
+    """Erase is a block-granular pulse — m-independent (the whole Vth
+    window collapses to the erased state either way)."""
+    return E_ERASE_NJ * 1e-9
+
+
 # --- Page capacity (Fig 2(d)) --------------------------------------------------
 
 TLC_PAGE_BYTES = 4096
@@ -100,6 +107,8 @@ def page_capacity_bytes(m: int, max_alpha: int = 10) -> float:
 # --- Block / chip simulator ----------------------------------------------------
 
 M_LADDER = (8, 7, 5, 3, 2)   # graceful degradation steps
+PAGES_PER_BLOCK = 128        # erase granularity: 128 pages per block
+CELLS_PER_BLOCK = CELLS_PER_PAGE * PAGES_PER_BLOCK
 
 
 @dataclass
@@ -114,7 +123,8 @@ class FlashBlock:
         return rber(self.m, self.pe_cycles)
 
     def capacity_bytes(self) -> float:
-        return 0.0 if self.retired else page_capacity_bytes(self.m) * 128
+        return 0.0 if self.retired \
+            else page_capacity_bytes(self.m) * PAGES_PER_BLOCK
 
     def program_erase(self, cycles: float = 1.0) -> None:
         self.pe_cycles += cycles

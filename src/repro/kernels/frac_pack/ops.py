@@ -336,3 +336,79 @@ def unpack_codes(words: jax.Array, kbits: int, n: int) -> jax.Array:
     """Inverse of pack_codes -> (n,) uint32 codes.  Gather-free and
     shard_map/vmap-safe for every width 1..32."""
     return codec.unpack_bits(words, kbits, n)
+
+
+# ---------------------------------------------------------------------------
+# host-side page streams (serve/flash_tier.py): raw page bytes <-> FRAC
+# cell levels at a flash block's current m-state.  Pure numpy — spills
+# and fault-ins happen at host-orchestrated bucket boundaries, and a
+# per-(page, m) jit here would recompile for every page size the pool
+# produces.  The codeword geometry is the lossless layer of
+# core/frac/codec.py: b = bits_for(m, best_alpha(m)) data bits per α
+# cells, so m picks CAPACITY (cells per byte), never fidelity — spilled
+# KV pages come back bit-identical, which is what keeps the
+# oversubscribed engine's outputs equal to solo serving.
+# ---------------------------------------------------------------------------
+
+
+def _np_pack_bits(vals: np.ndarray, bits: int) -> np.ndarray:
+    """(N,) codeword values < 2^bits -> packed uint32 word stream."""
+    n = int(vals.size)
+    n_words = -(-(n * bits) // 32)
+    start = np.arange(n, dtype=np.uint64) * np.uint64(bits)
+    wi = (start // np.uint64(32)).astype(np.int64)
+    off = start % np.uint64(32)
+    sh = vals.astype(np.uint64) << off
+    words = np.zeros(n_words + 1, np.uint32)  # +1: spill sink for the tail
+    np.bitwise_or.at(words, wi, (sh & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    np.bitwise_or.at(words, wi + 1, (sh >> np.uint64(32)).astype(np.uint32))
+    return words[:n_words]
+
+
+def _np_unpack_bits(words: np.ndarray, bits: int, n: int) -> np.ndarray:
+    """Inverse of ``_np_pack_bits`` -> (n,) uint32 codeword values."""
+    w = np.concatenate([words.astype(np.uint64), np.zeros(1, np.uint64)])
+    start = np.arange(n, dtype=np.uint64) * np.uint64(bits)
+    wi = (start // np.uint64(32)).astype(np.int64)
+    pair = w[wi] | (w[wi + 1] << np.uint64(32))
+    mask = np.uint64((1 << bits) - 1)
+    return ((pair >> (start % np.uint64(32))) & mask).astype(np.uint32)
+
+
+def page_stream_geometry(nbytes: int, m: int) -> tuple[int, int, int]:
+    """(alpha, b, n_cells) for an nbytes page stored on m-state cells at
+    the best-utilization code point."""
+    alpha = codec.best_alpha(m)
+    b = codec.bits_for(m, alpha)
+    return alpha, b, codec.cells_for_bytes(nbytes, m, alpha)
+
+
+def bytes_to_levels_np(data: bytes, m: int) -> np.ndarray:
+    """Raw page bytes -> (n_cells,) uint8 base-m cell levels (the flash
+    program path: each b-bit codeword becomes α Vth states)."""
+    alpha, b, n_cells = page_stream_geometry(len(data), m)
+    buf = bytes(data)
+    words = np.frombuffer(buf + b"\x00" * ((-len(buf)) % 4), np.uint32)
+    n_cw = n_cells // alpha
+    need = -(-(n_cw * b) // 32)
+    if words.size < need:
+        words = np.concatenate([words, np.zeros(need - words.size, np.uint32)])
+    vals = _np_unpack_bits(words, b, n_cw).astype(np.uint64)
+    digits = np.empty((n_cw, alpha), np.uint8)
+    for i in range(alpha):
+        digits[:, i] = (vals % m).astype(np.uint8)
+        vals //= m
+    return digits.reshape(-1)
+
+
+def levels_to_bytes_np(levels: np.ndarray, m: int, nbytes: int) -> bytes:
+    """Cell levels -> the original nbytes page (the flash read path).
+    Total function even on corrupted levels: a misread digit vector can
+    land outside the 2^b codeword range (the code's utilization gap),
+    so values are masked to b bits — the result is then garbage, but
+    *deterministic* garbage the checksum layer detects."""
+    alpha, b, _ = page_stream_geometry(nbytes, m)
+    grp = levels.astype(np.uint64).reshape(-1, alpha)
+    weights = np.array([m ** i for i in range(alpha)], np.uint64)
+    vals = (grp * weights).sum(axis=1) & np.uint64((1 << b) - 1)
+    return _np_pack_bits(vals, b).tobytes()[:nbytes]

@@ -38,6 +38,21 @@ def main() -> None:
                          "without an appendable KV cache)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="KV slots per page in --paged mode")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="decode lanes per bucket (fewer lanes + more "
+                         "requests = more staging/oversubscription)")
+    ap.add_argument("--flash-oversubscribe", action="store_true",
+                    help="oversubscribe the paged pool with a simulated "
+                         "recycled-flash spill tier (requires --paged)")
+    ap.add_argument("--flash-blocks", type=int, default=64,
+                    help="blocks in the simulated recycled chip")
+    ap.add_argument("--flash-seed", type=int, default=0,
+                    help="pre-wear / fault-injection seed")
+    ap.add_argument("--flash-rber-scale", type=float, default=1.0,
+                    help="scale organic flash RBER (0 disables faults)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall deadline; expired requests "
+                         "return whatever they produced")
     args = ap.parse_args()
 
     mcfg = get_tiny(args.arch)
@@ -51,16 +66,28 @@ def main() -> None:
     else:
         params = model.init_params(mcfg, jax.random.PRNGKey(0))
 
-    eng = ServeEngine(mcfg, params, max_batch=8,
+    flash = None
+    if args.flash_oversubscribe:
+        from repro.core.frac.wear import RecycledChip
+        from repro.serve.faults import FaultConfig
+        from repro.serve.flash_tier import FlashTier
+
+        flash = FlashTier(
+            RecycledChip(n_blocks=args.flash_blocks, seed=args.flash_seed),
+            faults=FaultConfig(seed=args.flash_seed,
+                               rber_scale=args.flash_rber_scale))
+    eng = ServeEngine(mcfg, params, max_batch=args.max_batch,
                       kv_frac_kbits=args.kv_frac_kbits,
-                      paged=args.paged, page_size=args.page_size)
+                      paged=args.paged, page_size=args.page_size,
+                      flash=flash)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = args.prompt_len
         if args.mixed_lengths:
             plen = max(2, args.prompt_len - (i % 4) * 2)
         eng.submit(rng.integers(1, mcfg.vocab_size, plen).astype(np.int32),
-                   max_new_tokens=args.max_new)
+                   max_new_tokens=args.max_new,
+                   max_wall_s=args.deadline_s)
     out = eng.run()
     for rid, toks in out.items():
         print(f"req {rid}: {toks}")
@@ -87,6 +114,18 @@ def main() -> None:
     elif args.paged:
         print("paged: requested but family has no appendable KV cache "
               "— served contiguous")
+    if flash is not None:
+        fd = rep.detail.get("flash", {})
+        print(f"flash: waves={s.oversub_waves} spills={s.spills} "
+              f"faultins={s.faultins} ecc={s.ecc_corrected} "
+              f"retries={s.retry_reads} reprefills={s.reprefills} "
+              f"bytes_peak={s.flash_bytes_peak} "
+              f"io={fd.get('reads', 0)}r/{fd.get('writes', 0)}w/"
+              f"{fd.get('erases', 0)}e op_j={fd.get('op_j', 0.0):.2e} "
+              f"capacity_left={flash.capacity_bytes():.0f}B")
+    if s.timeouts:
+        print(f"deadlines: {s.timeouts} request(s) expired at "
+              f"--deadline-s={args.deadline_s}")
 
 
 if __name__ == "__main__":

@@ -59,10 +59,35 @@ path.
 An optional ``mesh`` shards params (weight rule), caches (decode-cache
 rule, which also places the paged pool) and the loop's per-sequence
 vectors (``serve_loop_spec``) via sharding/rules.py.
+
+Flash oversubscription (``flash=FlashTier(...)``, paged mode only):
+the page pool is sized for the *active wave* instead of the whole
+super-bucket.  All admitted requests still share one ragged prefill,
+but the waiting requests' prompt KV is evicted — coldest-first — into
+the simulated recycled-NAND tier (serve/flash_tier.py) as lossless
+FRAC cell streams, and the super-bucket is served as host-orchestrated
+**waves** of up to ``max_batch`` requests: each wave faults its
+requests' pages back in (running the fault-injection recovery ladder:
+ECC → retry-read → lane re-prefill from the retained prompt), fills a
+wave-sized pool, and reuses the same jitted paged loop with an empty
+stage queue.  Extra host syncs per wave are the oversubscription
+overhead (reported in stats); outputs stay bit-identical to the
+non-oversubscribed engine and to solo serving because spills are
+lossless and unrecoverable pages are *replayed*, never patched.  When
+the tier cannot hold even one staged request (worn out / killed), the
+super-bucket degrades to exactly the non-oversubscribed path.
+
+Per-request deadlines (``max_wall_s``): expired pending requests are
+reaped at bucket/wave boundaries (freed like EOS, spilled pages
+discarded), and lanes already decoding have their ``max_new`` clamped
+from the measured step-time estimate so a request cannot overrun its
+budget by more than the loop granularity.  Timeouts are counted in
+``stats.timeouts`` and the affected rids land in ``engine.timeouts``.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 
 import jax
@@ -87,6 +112,9 @@ class Request:
     t_submit: float = 0.0
     t_first: float | None = None
     t_done: float | None = None
+    max_wall_s: float | None = None    # deadline from t_submit (None = ∞)
+    eff_max_new: int | None = None     # deadline-clamped budget last used
+    timed_out: bool = False
 
 
 @dataclass
@@ -107,6 +135,15 @@ class ServeStats:
                                     # (paged: the pow2-rounded pool)
     kv_pages_peak: int = 0          # paged: max pages live at once
     admissions: int = 0             # paged: in-loop slot refills
+    timeouts: int = 0               # requests expired by max_wall_s
+    oversub_waves: int = 0          # flash mode: waves decoded
+    spills: int = 0                 # flash mode: pool pages evicted
+    faultins: int = 0               # flash mode: pages read back
+    ecc_corrected: int = 0          # recovery ladder stage 1 hits
+    retry_reads: int = 0            # stage 2: extra-sense retry reads
+    reprefills: int = 0             # stage 3: lanes replayed from prompt
+    reprefill_tokens: int = 0       # prompt tokens recomputed by stage 3
+    flash_bytes_peak: int = 0       # max bytes live on the spill tier
 
 
 def build_decode_loop(mcfg: ModelConfig, *, eos_id: int | None = None,
@@ -310,7 +347,7 @@ class ServeEngine:
                  kv_frac_kbits: int | None = None,
                  meter: SustainabilityMeter | None = None,
                  mesh=None, paged: bool = False, page_size: int = 16,
-                 stage_depth: int = 16):
+                 stage_depth: int = 16, flash=None):
         self.mcfg = mcfg
         self.max_batch = max_batch
         self.eos_id = eos_id
@@ -319,9 +356,32 @@ class ServeEngine:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         self.page_size = page_size
         self.stage_depth = max(0, stage_depth)
-        # families without an appendable KV cache fall back silently:
-        # same results, contiguous layout (documented in docs/serving.md)
+        # families without an appendable KV cache fall back to the
+        # contiguous layout: same results, different residency — loudly,
+        # so capacity planning done against the paged byte model isn't
+        # silently invalidated (docs/serving.md)
         self.paged = bool(paged) and model.supports_paged(mcfg)
+        if paged and not self.paged:
+            warnings.warn(
+                f"paged=True requested but family {mcfg.family!r} does "
+                "not support a paged KV cache (no appendable per-token "
+                "slots); falling back to the contiguous layout — outputs "
+                "are identical, the paged byte model does not apply.",
+                UserWarning, stacklevel=2)
+        if flash is not None:
+            if not self.paged:
+                raise ValueError(
+                    "flash= (the recycled-flash spill tier) requires "
+                    "paged=True on a family with model.supports_paged — "
+                    f"family {mcfg.family!r}, paged={paged}")
+            if mesh is not None:
+                raise ValueError(
+                    "flash= does not compose with mesh= yet: wave "
+                    "fault-in reassembles caches host-side")
+        self.flash = flash
+        self.recovery: dict[int, dict] = {}    # rid -> recovery ledger
+        self.timeouts: set[int] = set()
+        self._step_s_est: float | None = None  # EWMA decode step time
         self.meter = meter or SustainabilityMeter(MeterConfig(), name="serve")
         self.reports: dict[int, EnergyReport] = {}
         self.mesh = mesh
@@ -340,13 +400,58 @@ class ServeEngine:
         self._loops: dict[tuple, object] = {}
 
     # -- admission -----------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               max_wall_s: float | None = None) -> int:
         rid = self._next_rid
         self._next_rid += 1
         self._pending.append(Request(rid, np.asarray(prompt, np.int32),
-                                     max_new_tokens, t_submit=time.time()))
+                                     max_new_tokens, t_submit=time.time(),
+                                     max_wall_s=max_wall_s))
         self.stats.requests += 1
         return rid
+
+    # -- deadlines -----------------------------------------------------------
+    def _finish_timeout(self, r: Request, now: float) -> None:
+        """Expire a request like EOS: whatever it produced so far is its
+        result, its spilled pages are dropped unread, and it leaves the
+        queue — a stuck or endlessly-retrying lane cannot wedge the
+        super-bucket behind it."""
+        r.done = True
+        r.t_done = now
+        r.timed_out = True
+        self._results[r.rid] = r.output
+        self.stats.timeouts += 1
+        self.timeouts.add(r.rid)
+        if self.flash is not None:
+            self.flash.discard(r.rid)
+        self._pending = [p for p in self._pending if p.rid != r.rid]
+
+    def _reap_expired(self) -> None:
+        now = time.time()
+        for r in [p for p in self._pending
+                  if p.max_wall_s is not None
+                  and now - p.t_submit >= p.max_wall_s]:
+            self._finish_timeout(r, now)
+
+    def _deadline_max_new(self, r: Request) -> int:
+        """Per-request decode budget for the next loop entry: the
+        remaining wall budget divided by the measured step time (EWMA),
+        floor 1 (the jitted loop cannot preempt a lane mid-flight, so
+        granularity is one loop entry — documented in docs/serving.md)."""
+        mn = max(1, r.max_new_tokens)
+        if r.max_wall_s is None or not self._step_s_est:
+            r.eff_max_new = mn
+            return mn
+        remaining = r.max_wall_s - (time.time() - r.t_submit)
+        mn = max(1, min(mn, int(remaining / self._step_s_est)))
+        r.eff_max_new = mn
+        return mn
+
+    def _note_steps(self, dt_s: float, steps: int) -> None:
+        if steps > 0:
+            per = dt_s / steps
+            self._step_s_est = (per if self._step_s_est is None
+                                else 0.7 * self._step_s_est + 0.3 * per)
 
     def _next_bucket(self) -> list[Request]:
         """Fill up to ``max_batch`` slots from the pending queue.
@@ -377,7 +482,12 @@ class ServeEngine:
         ``max_batch + stage_depth`` requests through in-loop admission.
         Returns {rid: tokens} for every completed request."""
         while self._pending:
-            if self.paged:
+            self._reap_expired()
+            if not self._pending:
+                break
+            if self.paged and self.flash is not None:
+                self._serve_flash_bucket()
+            elif self.paged:
                 self._serve_paged_bucket()
             else:
                 self._serve_bucket(self._next_bucket())
@@ -395,7 +505,7 @@ class ServeEngine:
         ``kv_bytes_pool``."""
         lens = np.asarray([len(r.prompt) for r in reqs], np.int32)
         S = int(lens.max())
-        max_new = np.asarray([max(1, r.max_new_tokens) for r in reqs],
+        max_new = np.asarray([self._deadline_max_new(r) for r in reqs],
                              np.int32)
         horizon = int(max_new.max())
         out_cap = 1 << (horizon - 1).bit_length()
@@ -469,6 +579,7 @@ class ServeEngine:
         self.stats.host_syncs += 1
         now = time.time()
         self.stats.decode_steps += int(steps_np)
+        self._note_steps(now - t_first, int(steps_np))
         self._finish_bucket(bucket, out_np, n_np, now, now - t_bucket0,
                             lambda i: bucket_kv_frac // B)
 
@@ -488,6 +599,14 @@ class ServeEngine:
             r.output = [int(t) for t in out_np[i, :ntok]]
             r.done = True
             r.t_done = now
+            # a deadline-clamped lane that used its whole clamped budget
+            # was cut by the clock, not by EOS/max_new: book the timeout
+            if (r.max_wall_s is not None and r.eff_max_new is not None
+                    and r.eff_max_new < max(1, r.max_new_tokens)
+                    and ntok >= r.eff_max_new):
+                r.timed_out = True
+                self.stats.timeouts += 1
+                self.timeouts.add(r.rid)
             done_ids.add(r.rid)
             self._results[r.rid] = r.output
             self.stats.tokens += ntok
@@ -578,6 +697,7 @@ class ServeEngine:
         self.stats.host_syncs += 1
         now = time.time()
         self.stats.decode_steps += int(steps_np)
+        self._note_steps(now - t_first, int(steps_np))
         self.stats.admissions += int(adm_np)
         assert int(adm_np) == staged_n, "stage queue not drained in-loop"
         page_full_b, page_frac_b = self._page_bytes()
@@ -594,6 +714,267 @@ class ServeEngine:
             self.stats.kv_bytes_frac += pages_total * page_frac_b
             kv_bytes_fn = lambda i: int(ppr_np[i]) * page_frac_b
         self._finish_bucket(reqs, out_np, n_np, now, now - t_bucket0,
+                            kv_bytes_fn)
+
+    # -- flash-oversubscribed super-bucket -------------------------------------
+    def _serve_flash_bucket(self) -> None:
+        """Oversubscribed super-bucket: one shared ragged prefill for
+        active + staged requests, the staged requests' prompt KV evicted
+        (coldest-first) into the flash tier, then host-orchestrated
+        waves of up to ``max_batch`` lanes — each wave faults its pages
+        back in through the recovery ladder and runs the same jitted
+        paged loop over a *wave-sized* pool.  The HBM high-water mark is
+        one wave's pool instead of the whole bucket's (the
+        sequences-per-pool-byte win bench_serve gates); the extra host
+        syncs per wave and any recovery work are the reported overhead.
+        A tier that cannot hold even one staged request degrades to
+        exactly the non-oversubscribed path."""
+        from repro.serve import flash_tier as ftier
+
+        nb = min(self.max_batch, len(self._pending))
+        cand = self._pending[: nb + self.stage_depth]
+        staged = cand[nb:]
+        # LRU victim order over the cold staged prompts (their KV is
+        # untouched since submit), then a greedy capacity dry-run
+        order = ftier.pick_victims(
+            [(i, r.t_submit) for i, r in enumerate(staged)])
+        sizes_all: list[int] = []
+        fit: list[int] = []
+        for i in order:
+            sizes = self._spill_page_sizes(len(staged[i].prompt))
+            if self.flash.would_fit(sizes_all + sizes):
+                sizes_all += sizes
+                fit.append(i)
+        if not fit:
+            # exhausted tier (or nothing staged): exactly PR-5 behavior
+            self._serve_paged_bucket()
+            return
+        reqs = cand[:nb] + [staged[i] for i in sorted(fit)]
+        lens, S, max_new, _, out_cap, prompts = self._bucket_geometry(reqs)
+        t_bucket0 = time.time()
+        tok0, cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(prompts)}, jnp.asarray(lens))
+        self.stats.prefills += 1
+        if self.kv_frac_kbits is not None:
+            from repro.kernels.frac_pack import ops as fops
+
+            cache = jax.tree.map(
+                lambda leaf: fops.fake_quant_slots(
+                    leaf, self.kv_frac_kbits, row_dims=2), cache)
+        leaves, treedef = jax.tree.flatten(cache)
+        tok0_np = np.asarray(jax.device_get(tok0))
+        t_first = time.time()
+        t0map = {r.rid: int(tok0_np[i]) for i, r in enumerate(reqs)}
+        # spill the staged prompt KV straight from the prefill transient
+        # (those pages never enter the HBM pool); a request whose spill
+        # fails mid-way (capacity drifted under an injected event) rolls
+        # back and stays pending for the next super-bucket
+        staged_reqs = reqs[nb:]
+        queue: list[Request] = []
+        if staged_reqs:
+            staged_np = jax.device_get([l[:, nb:] for l in leaves])
+            self.stats.host_syncs += 1       # oversubscription overhead
+            for j, r in enumerate(staged_reqs):
+                if self._spill_request(r, staged_np, j):
+                    queue.append(r)
+                else:
+                    self.flash.discard(r.rid)
+        for r in reqs[:nb] + queue:          # the actually-served set
+            r.t_first = t_first
+            self.stats.ttft_s.append(t_first - r.t_submit)
+        # wave 1: active lanes decode from the device-resident prefill
+        # slices — the hot set never round-trips through the host
+        self._serve_wave(reqs[:nb], [l[:, :nb] for l in leaves],
+                         treedef, t0map)
+        while queue:
+            now = time.time()
+            for r in [q for q in queue
+                      if q.max_wall_s is not None
+                      and now - q.t_submit >= q.max_wall_s]:
+                self._finish_timeout(r, now)
+                queue.remove(r)
+            if not queue:
+                break
+            wave, queue = queue[: self.max_batch], queue[self.max_batch:]
+            wave_np = self._fault_in_wave(wave, leaves, t0map)
+            self._serve_wave(wave, wave_np, treedef, t0map)
+        # flash I/O energy: device-level ops at wear.py prices plus the
+        # spilled bytes' recycled-flash embodied residency share
+        io = self.flash.drain_io()
+        if io["reads"] or io["writes"] or io["erases"]:
+            dt = time.time() - t_bucket0
+            self.meter.flash_io(
+                io["energy_j"], reads=io["reads"], writes=io["writes"],
+                erases=io["erases"],
+                tb_s=self.flash.stats.bytes_live_peak * dt / 1e12)
+        fs = self.flash.stats
+        self.stats.spills = fs.spills
+        self.stats.faultins = fs.faultins
+        self.stats.ecc_corrected = fs.ecc_corrected
+        self.stats.retry_reads = fs.retry_reads
+        self.stats.flash_bytes_peak = max(self.stats.flash_bytes_peak,
+                                          fs.bytes_live_peak)
+
+    def _spill_page_sizes(self, plen: int) -> list[int]:
+        """Byte size of each prompt page of a length-``plen`` request as
+        spilled: all layers' k/v rows for the page's *valid* slots only
+        (the right-padding never leaves the device)."""
+        row_b = self._page_bytes()[0] // self.page_size
+        ps = self.page_size
+        return [row_b * (min(plen, (pg + 1) * ps) - pg * ps)
+                for pg in range(paging.pages_for(plen, ps))]
+
+    def _spill_request(self, r: Request, staged_np, j: int) -> bool:
+        """Evict request ``r``'s prompt pages (leaf-concatenated bytes,
+        valid rows only) into the flash tier.  False = tier full."""
+        ps = self.page_size
+        plen = len(r.prompt)
+        for pg in range(paging.pages_for(plen, ps)):
+            lo, hi = pg * ps, min(plen, (pg + 1) * ps)
+            data = b"".join(
+                np.ascontiguousarray(l[:, j, lo:hi]).tobytes()
+                for l in staged_np)
+            if not self.flash.spill(r.rid, pg, data):
+                return False
+        return True
+
+    def _fault_in_wave(self, wave, leaves, t0map) -> list:
+        """Restore a wave's prompt KV from the flash tier into
+        prefill-cache-shaped numpy leaves, running the recovery ladder
+        per page; lanes with an unrecoverable page are replayed from
+        their retained prompts in one ragged re-prefill (stage 3)."""
+        ps = self.page_size
+        lens_w = [len(r.prompt) for r in wave]
+        S_w = max(lens_w)
+        outs = [np.zeros((l.shape[0], len(wave), S_w) + tuple(l.shape[3:]),
+                         dtype=l.dtype) for l in leaves]
+        failed: list[int] = []
+        for j, r in enumerate(wave):
+            rec = self.recovery.setdefault(
+                r.rid, {"ecc": 0, "retry": 0, "lost_pages": 0,
+                        "reprefill": False, "tokens_replayed": 0})
+            ok = True
+            for pg in range(paging.pages_for(lens_w[j], ps)):
+                data, stage = self.flash.fault_in(r.rid, pg)
+                if stage == "ecc":
+                    rec["ecc"] += 1
+                elif stage == "retry":
+                    rec["retry"] += 1
+                if data is None:
+                    rec["lost_pages"] += 1
+                    ok = False      # keep draining the lane's other pages
+                    continue
+                self._write_page(outs, j, pg, data, lens_w[j])
+            if not ok:
+                failed.append(j)
+        if failed:
+            self._reprefill(wave, failed, outs, t0map)
+        return outs
+
+    def _write_page(self, outs, j: int, pg: int, data: bytes,
+                    plen: int) -> None:
+        """Split one restored page's bytes back into the cache leaves
+        (inverse of the ``_spill_request`` concatenation)."""
+        ps = self.page_size
+        lo, hi = pg * ps, min(plen, (pg + 1) * ps)
+        off = 0
+        for o in outs:
+            tail = tuple(o.shape[3:])
+            n = o.shape[0] * (hi - lo) * int(np.prod(tail))
+            seg = n * o.dtype.itemsize
+            o[:, j, lo:hi] = np.frombuffer(
+                data[off:off + seg], dtype=o.dtype
+            ).reshape((o.shape[0], hi - lo) + tail)
+            off += seg
+        assert off == len(data), "page byte split out of register"
+
+    def _reprefill(self, wave, failed, outs, t0map) -> None:
+        """Recovery stage 3: replay the failed lanes' prompts through
+        one ragged prefill.  Prefill is deterministic and its per-lane
+        numerics batch-independent, so the regenerated KV — and the
+        first token, asserted against the original — is bit-identical
+        to what was lost; the cost is the replayed prompt tokens."""
+        reqs = [wave[j] for j in failed]
+        lens = np.asarray([len(r.prompt) for r in reqs], np.int32)
+        S = int(lens.max())
+        prompts = np.zeros((len(reqs), S), np.int32)
+        for i, r in enumerate(reqs):
+            prompts[i, : lens[i]] = r.prompt
+        tok0, cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(prompts)}, jnp.asarray(lens))
+        self.stats.prefills += 1
+        if self.kv_frac_kbits is not None:
+            from repro.kernels.frac_pack import ops as fops
+
+            cache = jax.tree.map(
+                lambda leaf: fops.fake_quant_slots(
+                    leaf, self.kv_frac_kbits, row_dims=2), cache)
+        tok0_np, rp = jax.device_get((tok0, jax.tree.leaves(cache)))
+        self.stats.host_syncs += 1           # recovery overhead
+        for i, j in enumerate(failed):
+            r = wave[j]
+            assert int(tok0_np[i]) == t0map[r.rid], \
+                "re-prefill diverged from the original prefill"
+            for o, src in zip(outs, rp):
+                o[:, j, : lens[i]] = src[:, i, : lens[i]]
+            self.stats.reprefills += 1
+            self.stats.reprefill_tokens += int(lens[i])
+            rec = self.recovery[r.rid]
+            rec["reprefill"] = True
+            rec["tokens_replayed"] += int(lens[i])
+
+    def _serve_wave(self, wreqs, wave_leaves, treedef, t0map) -> None:
+        """One non-oversubscribed paged decode over a wave-sized pool —
+        the same jitted loop as the plain paged path with an empty stage
+        queue (Q=0 statically skips the admission machinery)."""
+        ps = self.page_size
+        t_wave0 = time.time()
+        lens = np.asarray([len(r.prompt) for r in wreqs], np.int32)
+        S_w = int(lens.max())
+        max_new = np.asarray([self._deadline_max_new(r) for r in wreqs],
+                             np.int32)
+        out_cap = 1 << (int(max_new.max()) - 1).bit_length()
+        plan = paging.plan_pages(lens, max_new, len(wreqs), ps, pow2=True)
+        pi, oi = paging.pool_scatter_indices(
+            plan.page_table, lens, S_w, plan.n_pages, ps)
+        pool_specs = model.paged_pool_specs(self.mcfg, plan.n_pages, ps)
+        pi, oi = jnp.asarray(pi), jnp.asarray(oi)
+        cache_w = jax.tree.unflatten(
+            treedef, [jnp.asarray(l[:, :, :S_w]) for l in wave_leaves])
+        pool = jax.tree.map(
+            lambda spec, leaf: paging.fill_pool(
+                jnp.zeros(spec.shape, leaf.dtype), leaf, pi, oi),
+            pool_specs, cache_w, is_leaf=is_leaf_spec)
+        tok0 = jnp.asarray([t0map[r.rid] for r in wreqs], jnp.int32)
+        loop = self._get_paged_loop(out_cap)
+        out, n_out, steps, peak, ppr, adm, _ = loop(
+            self.params, pool, jnp.asarray(plan.page_table),
+            jnp.asarray(plan.free_stack), np.int32(plan.free_top),
+            tok0, jnp.asarray(lens), jnp.zeros((0,), jnp.int32),
+            jnp.zeros((0,), jnp.int32), jnp.asarray(plan.staged_pt),
+            jnp.asarray(max_new))
+        out_np, n_np, steps_np, peak_np, ppr_np, adm_np = jax.device_get(
+            (out, n_out, steps, peak, ppr, adm))
+        self.stats.host_syncs += 1
+        now = time.time()
+        self.stats.decode_steps += int(steps_np)
+        self._note_steps(now - t_wave0, int(steps_np))
+        assert int(adm_np) == 0
+        self.stats.oversub_waves += 1
+        page_full_b, page_frac_b = self._page_bytes()
+        self.stats.kv_pages_peak = max(self.stats.kv_pages_peak,
+                                       int(peak_np))
+        self.stats.kv_bytes_peak = max(self.stats.kv_bytes_peak,
+                                       int(peak_np) * page_full_b)
+        self.stats.kv_bytes_pool = max(self.stats.kv_bytes_pool,
+                                       plan.n_pages * page_full_b)
+        kv_bytes_fn = lambda i: 0
+        if self.kv_frac_kbits is not None:
+            pages_total = int(ppr_np.sum())
+            self.stats.kv_bytes_full += pages_total * page_full_b
+            self.stats.kv_bytes_frac += pages_total * page_frac_b
+            kv_bytes_fn = lambda i: int(ppr_np[i]) * page_frac_b
+        self._finish_bucket(wreqs, out_np, n_np, now, now - t_wave0,
                             kv_bytes_fn)
 
     def _page_bytes(self) -> tuple[int, int]:

@@ -1,0 +1,131 @@
+"""Deterministic fault injection for the recycled-flash spill tier.
+
+The tier (serve/flash_tier.py) stores spilled KV pages as FRAC cell
+levels on simulated recycled-NAND blocks; every read is a chance for
+raw bit errors (RBER, wear.py).  This module decides, reproducibly,
+*which* cells misread on *which* read — so a CI matrix over fixed seeds
+replays byte-identical fault traces — and models the read-side half of
+the recovery ladder:
+
+  stage 1  ECC within budget: the LDPC engine corrects up to
+           ``wear.ECC_LIMIT`` raw errors per read "for free" (its
+           decode cost is part of the page-read energy already);
+  stage 2  retry-read: one extra sense iteration narrows the Vth
+           windows, dividing the effective RBER by
+           ``FaultConfig.retry_sense_gain`` (paper §II-B: reads take
+           ⌈log2 m⌉ compares; a marginal cell usually resolves with
+           one more) — costs one sense iteration of latency/energy;
+  stage 3  the page is unrecoverable.  The *tier* reports it lost and
+           the *engine* replays the owning request from its retained
+           prompt (lane re-prefill) — data is regenerated, never
+           silently corrupted.
+
+Besides organic RBER-driven flips, the injector schedules *forced*
+events so tests and CI can pin every rung of the ladder:
+
+  ``bit_flip``       the ``at``-th fault-in reads with an effective
+                     RBER of ``severity × ECC_LIMIT`` (≤1: stage-1
+                     correctable; 1..retry_sense_gain: stage 2 saves
+                     it; larger: stage 3, lane re-prefill);
+  ``block_death``    the block that received the ``at``-th spill dies
+                     (its live pages drain to surviving blocks);
+  ``capacity_loss``  after the ``at``-th spill, a ``severity``
+                     fraction of the chip's live blocks retires at
+                     once (a recycled chip losing a plane/die).
+
+Randomness is keyed by ``(seed, rid, page_no, read ordinal, attempt)``
+so a trace replay flips the same cells regardless of scheduling.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.frac import wear
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault.  ``at`` is a 1-based ordinal counted in
+    fault-ins (``bit_flip``) or spills (``block_death`` /
+    ``capacity_loss``)."""
+
+    kind: str                  # bit_flip | block_death | capacity_loss
+    at: int = 1
+    severity: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in ("bit_flip", "block_death", "capacity_loss"):
+            raise ValueError(
+                f"FaultEvent.kind={self.kind!r}: expected bit_flip | "
+                "block_death | capacity_loss")
+        if self.at < 1:
+            raise ValueError("FaultEvent.at is a 1-based ordinal")
+        if self.severity < 0.0:
+            raise ValueError("FaultEvent.severity must be >= 0")
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    seed: int = 0
+    rber_scale: float = 1.0          # amplify organic wear-driven RBER
+    retry_sense_gain: float = 4.0    # extra sense iteration divides RBER
+    events: tuple = ()               # FaultEvents, any order
+
+
+class FaultInjector:
+    """Owns the fault schedule and the per-read randomness."""
+
+    def __init__(self, cfg: FaultConfig | None = None):
+        self.cfg = cfg or FaultConfig()
+        self.n_reads = 0
+        self.n_spills = 0
+
+    # -- read-side -----------------------------------------------------------
+    def begin_read(self) -> int:
+        """Advance the read ordinal (one per fault-in, retries share it
+        so a forced event covers both attempts)."""
+        self.n_reads += 1
+        return self.n_reads
+
+    def _forced_rber(self, read_ordinal: int) -> float | None:
+        for ev in self.cfg.events:
+            if ev.kind == "bit_flip" and ev.at == read_ordinal:
+                return ev.severity * wear.ECC_LIMIT
+        return None
+
+    def flip_cells(self, read_ordinal: int, rid: int, page_no: int,
+                   n_cells: int, m: int, rber: float, attempt: int
+                   ) -> np.ndarray:
+        """Indices of cells that misread on this attempt (0 = first
+        read, 1 = retry with one extra sense iteration)."""
+        forced = self._forced_rber(read_ordinal)
+        p = forced if forced is not None else rber * self.cfg.rber_scale
+        p = p / (self.cfg.retry_sense_gain ** attempt)
+        rng = np.random.default_rng(
+            [self.cfg.seed & 0x7FFFFFFF, rid, page_no, read_ordinal, attempt])
+        return np.nonzero(rng.random(n_cells) < p)[0]
+
+    def corrupt_levels(self, levels: np.ndarray, flips: np.ndarray,
+                       m: int, rid: int, page_no: int, attempt: int
+                       ) -> np.ndarray:
+        """Apply misreads: each flipped cell lands on a *different*
+        level (a Vth compare can only confuse neighbours, but any wrong
+        digit corrupts the codeword the same way)."""
+        if flips.size == 0:
+            return levels
+        rng = np.random.default_rng(
+            [self.cfg.seed & 0x7FFFFFFF, rid, page_no, attempt, 0x5EED])
+        out = levels.copy()
+        bump = rng.integers(1, max(m, 2), flips.size).astype(levels.dtype)
+        out[flips] = (out[flips] + bump) % m
+        return out
+
+    # -- write-side events ---------------------------------------------------
+    def after_spill(self) -> list[FaultEvent]:
+        """Events triggered by the spill that just happened."""
+        self.n_spills += 1
+        return [ev for ev in self.cfg.events
+                if ev.kind in ("block_death", "capacity_loss")
+                and ev.at == self.n_spills]

@@ -1,0 +1,377 @@
+"""Simulated recycled-flash spill tier for the paged KV cache.
+
+Turns the wear/degradation models (core/frac/wear.py, policy.py) into a
+live memory-hierarchy tier under serve/engine.py: the HBM page pool
+becomes *oversubscribable* by evicting cold KV pages into the blocks of
+a :class:`~repro.core.frac.wear.RecycledChip` as FRAC-packed cell-level
+streams, and faulting them back in before ``gather_pages`` ever reads
+them.
+
+Design points:
+
+* **Lossless spill.**  A page's raw bytes go through the *lossless*
+  layer of the FRAC code (``ops.bytes_to_levels_np``) at the receiving
+  block's current m-state: m decides how many cells the page needs
+  (``codec.best_alpha`` / ``bits_for``), never what comes back.  A
+  fault-in either restores the exact bytes (possibly after ECC or a
+  retry-read) or reports the page lost so the engine re-prefills —
+  outputs stay bit-identical to non-oversubscribed serving.
+
+* **Wear-aware placement.**  Spills go to the least-worn live block
+  with room (``RecycledChip.least_worn`` order); each spill write books
+  P/E wear as programmed-pages / ``PAGES_PER_BLOCK`` on that block.
+
+* **Graceful degradation.**  When a block drains empty it is erased,
+  and ``DegradationPolicy.maybe_degrade`` may step it down the m-ladder
+  (8→7→5→3→2) — capacity shrinks monotonically instead of cliffing.
+  Blocks holding live data never change m (the stored level geometry
+  depends on it); their step is deferred to the drain-time erase.
+  ``wear_epoch`` lets tests/benches age the chip between buckets.
+
+* **Failure modes.**  Every read runs the fault injector
+  (serve/faults.py).  Recovery ladder per read: raw flips within the
+  ECC budget are corrected for free; above budget, one retry-read with
+  an extra sense iteration (RBER / ``retry_sense_gain``); still above →
+  the page is LOST and the caller re-prefills.  Whole-block death and
+  chip-capacity-loss events retire blocks and *drain* their live pages
+  to surviving blocks through the same read ladder.
+
+* **Energy accounting.**  Reads, programs, erases and retry senses
+  accumulate Joules and busy-µs from wear.py's per-page constants;
+  the engine drains them into the ESE meter per super-bucket
+  (``drain_io``).
+
+All state is host-side numpy: spills/fault-ins happen at bucket
+boundaries, not inside the jitted decode loop.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.frac import wear
+from repro.core.frac.policy import DegradationPolicy
+from repro.kernels.frac_pack import ops as fops
+from repro.serve.faults import FaultConfig, FaultInjector
+
+
+def pick_victims(candidates):
+    """LRU/cold-first victim order: ``candidates`` is a sequence of
+    ``(key, last_touch_s)``; returns keys coldest (least-recently
+    touched) first, submission order breaking ties.  In the wave-mode
+    engine the active lanes' pages are hot (read every decode step) and
+    never spill — the candidates are the admitted-but-waiting requests'
+    prompt pages, evicted coldest-first until the tier is full."""
+    order = sorted(range(len(candidates)),
+                   key=lambda i: (candidates[i][1], i))
+    return [candidates[i][0] for i in order]
+
+
+@dataclass
+class SpilledPage:
+    rid: int
+    page_no: int
+    nbytes: int
+    crc: int
+    block_id: int
+    m: int                   # block's m at program time (level geometry)
+    n_cells: int
+    levels: np.ndarray       # (n_cells,) uint8 base-m digits
+
+
+@dataclass
+class FlashTierStats:
+    spills: int = 0
+    faultins: int = 0
+    discards: int = 0
+    relocations: int = 0
+    lost_pages: int = 0
+    clean_reads: int = 0
+    ecc_corrected: int = 0
+    retry_reads: int = 0
+    erases: int = 0
+    m_steps: int = 0
+    blocks_retired: int = 0
+    block_deaths: int = 0
+    reads_pages: int = 0     # physical flash pages sensed
+    writes_pages: int = 0    # physical flash pages programmed
+    bytes_live: int = 0
+    bytes_live_peak: int = 0
+    energy_j: float = 0.0
+    busy_us: float = 0.0
+
+
+class FlashTier:
+    """Spill/fault-in tier over one simulated recycled chip."""
+
+    def __init__(self, chip: wear.RecycledChip | None = None, *,
+                 policy: DegradationPolicy | None = None,
+                 faults: FaultConfig | FaultInjector | None = None):
+        self.chip = chip if chip is not None else wear.RecycledChip()
+        self.policy = policy if policy is not None else DegradationPolicy()
+        self.injector = faults if isinstance(faults, FaultInjector) \
+            else FaultInjector(faults)
+        self.stats = FlashTierStats()
+        self._pages: dict[tuple[int, int], SpilledPage] = {}
+        self._by_block: dict[int, set] = {}
+        self._used_cells: dict[int, int] = {}
+        self._dirty: set[int] = set()       # programmed since last erase
+        self._lost: set[tuple[int, int]] = set()
+        self._io_mark = (0.0, 0.0, 0, 0, 0)
+        self.calibrate()
+
+    def calibrate(self) -> None:
+        """Initial m-sizing: a recycled chip's controller steps each
+        block down the ladder until its projected RBER fits the policy
+        headroom *before* first use (the erase-time check would do the
+        same one erase late).  Heavily pre-worn blocks may retire here —
+        exactly the paper's 'about-to-worn-out' population triage."""
+        for blk in self._live_blocks():
+            while self.policy.maybe_degrade(blk):
+                pass
+
+    # -- capacity ------------------------------------------------------------
+    def _live_blocks(self):
+        return [b for b in self.chip.blocks if not b.retired]
+
+    def _free_cells(self, blk: wear.FlashBlock) -> int:
+        return wear.CELLS_PER_BLOCK - self._used_cells.get(blk.block_id, 0)
+
+    def capacity_bytes(self) -> float:
+        """Total tier capacity at current m-states (monotone under
+        wear: blocks only step down the ladder or retire)."""
+        from repro.core.frac.codec import bits_per_cell
+        return sum(wear.CELLS_PER_BLOCK * bits_per_cell(b.m) / 8.0
+                   for b in self._live_blocks())
+
+    def usable_bytes(self) -> float:
+        from repro.core.frac.codec import bits_per_cell
+        return sum(self._free_cells(b) * bits_per_cell(b.m) / 8.0
+                   for b in self._live_blocks())
+
+    def would_fit(self, page_nbytes) -> bool:
+        """Greedy dry-run: could this list of page sizes be placed now
+        (least-worn-first, same order the real spills would use)?"""
+        free = {b.block_id: self._free_cells(b) for b in self._live_blocks()}
+        order = self.chip.least_worn(len(self.chip.blocks))
+        for nbytes in page_nbytes:
+            for blk in order:
+                _, _, n_cells = fops.page_stream_geometry(nbytes, blk.m)
+                if free.get(blk.block_id, 0) >= n_cells:
+                    free[blk.block_id] -= n_cells
+                    break
+            else:
+                return False
+        return True
+
+    # -- spill (program) -------------------------------------------------------
+    def spill(self, rid: int, page_no: int, data: bytes) -> bool:
+        """Evict one pool page to flash.  False = no block has room (the
+        caller keeps the request pending / falls back to PR-5 mode)."""
+        key = (rid, page_no)
+        assert key not in self._pages and key not in self._lost
+        sp = self._place(rid, page_no, bytes(data))
+        if sp is None:
+            return False
+        self.stats.spills += 1
+        self.stats.bytes_live += sp.nbytes
+        self.stats.bytes_live_peak = max(self.stats.bytes_live_peak,
+                                         self.stats.bytes_live)
+        for ev in self.injector.after_spill():
+            if ev.kind == "block_death":
+                self._kill_block(sp.block_id)
+            elif ev.kind == "capacity_loss":
+                self._capacity_loss(ev.severity)
+        return True
+
+    def _place(self, rid: int, page_no: int, data: bytes,
+               exclude: int | None = None) -> SpilledPage | None:
+        for blk in self.chip.least_worn(len(self.chip.blocks)):
+            if blk.block_id == exclude:
+                continue
+            _, _, n_cells = fops.page_stream_geometry(len(data), blk.m)
+            if self._free_cells(blk) >= n_cells:
+                break
+        else:
+            return None
+        levels = fops.bytes_to_levels_np(data, blk.m)
+        sp = SpilledPage(rid, page_no, len(data), zlib.crc32(data),
+                         blk.block_id, blk.m, n_cells, levels)
+        self._pages[(rid, page_no)] = sp
+        self._by_block.setdefault(blk.block_id, set()).add((rid, page_no))
+        self._used_cells[blk.block_id] = \
+            self._used_cells.get(blk.block_id, 0) + n_cells
+        self._dirty.add(blk.block_id)
+        npg = -(-n_cells // wear.CELLS_PER_PAGE)
+        blk.program_erase(npg / wear.PAGES_PER_BLOCK)   # P/E per spill write
+        self.stats.writes_pages += npg
+        self.stats.energy_j += npg * wear.page_program_energy_j(blk.m)
+        self.stats.busy_us += npg * wear.page_program_us(blk.m)
+        return sp
+
+    # -- fault-in (read + recovery ladder) -------------------------------------
+    def fault_in(self, rid: int, page_no: int) -> tuple[bytes | None, str]:
+        """Bring a spilled page back for the pool.  Returns
+        ``(bytes, stage)`` with stage ∈ {clean, ecc, retry} on success,
+        or ``(None, 'lost')`` — the caller must re-prefill the lane.
+        Either way the page leaves the tier (restored or regenerated)."""
+        key = (rid, page_no)
+        self.stats.faultins += 1
+        if key in self._lost:
+            self._lost.discard(key)
+            self.stats.lost_pages += 1
+            return None, "lost"
+        sp = self._pages[key]
+        data, stage = self._read_page(sp)
+        self._unlink(sp)
+        if data is None:
+            self.stats.lost_pages += 1
+            return None, "lost"
+        return data, stage
+
+    def _read_page(self, sp: SpilledPage) -> tuple[bytes | None, str]:
+        """The three-stage recovery ladder for one physical read."""
+        blk = self.chip.blocks[sp.block_id]
+        ordinal = self.injector.begin_read()
+        npg = -(-sp.n_cells // wear.CELLS_PER_PAGE)
+        budget = int(wear.ECC_LIMIT * sp.n_cells)
+        for attempt in (0, 1):
+            self.stats.reads_pages += npg
+            self.stats.energy_j += npg * wear.page_read_energy_j(sp.m)
+            self.stats.busy_us += npg * wear.page_read_us(sp.m)
+            if attempt == 1:        # one extra sense iteration per page
+                self.stats.energy_j += npg * wear.E_SENSE_NJ * 1e-9
+                self.stats.busy_us += npg * wear.T_SENSE_US
+            flips = self.injector.flip_cells(
+                ordinal, sp.rid, sp.page_no, sp.n_cells, sp.m,
+                blk.rber(), attempt)
+            if flips.size <= budget:
+                # within budget the LDPC engine corrects "for free" —
+                # decode cost is already part of the page-read energy
+                data = fops.levels_to_bytes_np(sp.levels, sp.m, sp.nbytes)
+                assert zlib.crc32(data) == sp.crc
+                if attempt == 1:
+                    stage = "retry"
+                elif flips.size:
+                    stage = "ecc"
+                    self.stats.ecc_corrected += 1
+                else:
+                    stage = "clean"
+                    self.stats.clean_reads += 1
+                return data, stage
+            # over budget: the decoder fails; the end-to-end page
+            # checksum double-checks that the corrupted bytes never
+            # masquerade as good data
+            bad = fops.levels_to_bytes_np(
+                self.injector.corrupt_levels(
+                    sp.levels, flips, sp.m, sp.rid, sp.page_no, attempt),
+                sp.m, sp.nbytes)
+            assert zlib.crc32(bad) != sp.crc or flips.size == 0
+            if attempt == 0:
+                self.stats.retry_reads += 1
+        return None, "lost"
+
+    # -- release / erase / degradation -----------------------------------------
+    def _unlink(self, sp: SpilledPage, erase_ok: bool = True) -> None:
+        key = (sp.rid, sp.page_no)
+        self._pages.pop(key, None)
+        bid = sp.block_id
+        owned = self._by_block.get(bid, set())
+        owned.discard(key)
+        self._used_cells[bid] = self._used_cells.get(bid, 0) - sp.n_cells
+        self.stats.bytes_live -= sp.nbytes
+        if erase_ok and not owned and bid in self._dirty:
+            self._erase(bid)
+
+    def _erase(self, bid: int) -> None:
+        self._dirty.discard(bid)
+        self._used_cells[bid] = 0
+        blk = self.chip.blocks[bid]
+        self.stats.erases += 1
+        self.stats.energy_j += wear.block_erase_energy_j()
+        self.stats.busy_us += wear.T_ERASE_US
+        if blk.retired:
+            return
+        was_retired = blk.retired
+        if self.policy.maybe_degrade(blk):
+            self.stats.m_steps += 1
+        if blk.retired and not was_retired:
+            self.stats.blocks_retired += 1
+
+    def discard(self, rid: int) -> int:
+        """Drop every spilled page of a request without reading it
+        (deadline expiry / abandonment).  Returns pages dropped."""
+        keys = [k for k in self._pages if k[0] == rid]
+        for k in keys:
+            self._unlink(self._pages[k])
+        lost = [k for k in self._lost if k[0] == rid]
+        for k in lost:
+            self._lost.discard(k)
+        self.stats.discards += len(keys) + len(lost)
+        return len(keys) + len(lost)
+
+    def wear_epoch(self, cycles: float) -> None:
+        """Age every live block by ``cycles`` P/E (background traffic /
+        test hook).  Empty blocks run the degradation check immediately;
+        blocks holding live data defer it to their drain-time erase (the
+        stored levels' geometry depends on the current m)."""
+        for blk in self._live_blocks():
+            blk.program_erase(cycles)
+            if not self._by_block.get(blk.block_id):
+                was_retired = blk.retired
+                if self.policy.maybe_degrade(blk):
+                    self.stats.m_steps += 1
+                if blk.retired and not was_retired:
+                    self.stats.blocks_retired += 1
+
+    # -- block-level fault events ----------------------------------------------
+    def _kill_block(self, bid: int) -> None:
+        """Whole-block death: retire it and drain live victims to
+        surviving blocks through the read ladder; unrecoverable or
+        unplaceable pages are lost (their lanes re-prefill)."""
+        blk = self.chip.blocks[bid]
+        if not blk.retired:
+            blk.retired = True
+            self.stats.blocks_retired += 1
+        self.stats.block_deaths += 1
+        for key in sorted(self._by_block.get(bid, set())):
+            sp = self._pages[key]
+            data, _ = self._read_page(sp)
+            self._unlink(sp, erase_ok=False)
+            moved = None
+            if data is not None:
+                moved = self._place(sp.rid, sp.page_no, data, exclude=bid)
+            if moved is not None:
+                self.stats.relocations += 1
+                self.stats.bytes_live += moved.nbytes
+            else:
+                self._lost.add(key)
+        self._by_block.pop(bid, None)
+        self._dirty.discard(bid)
+
+    def _capacity_loss(self, severity: float) -> None:
+        """A severity-fraction of live blocks dies at once (a recycled
+        chip losing a plane/die) — most-worn first."""
+        live = sorted(self._live_blocks(), key=lambda b: -b.pe_cycles)
+        k = max(1, int(round(severity * len(live))))
+        for blk in live[:k]:
+            self._kill_block(blk.block_id)
+
+    # -- energy drain ----------------------------------------------------------
+    def drain_io(self) -> dict:
+        """I/O totals since the previous drain — the engine books these
+        into the ESE meter once per super-bucket."""
+        s = self.stats
+        e0, b0, r0, w0, x0 = self._io_mark
+        out = {
+            "energy_j": s.energy_j - e0,
+            "busy_us": s.busy_us - b0,
+            "reads": s.reads_pages - r0,
+            "writes": s.writes_pages - w0,
+            "erases": s.erases - x0,
+        }
+        self._io_mark = (s.energy_j, s.busy_us, s.reads_pages,
+                         s.writes_pages, s.erases)
+        return out

@@ -236,11 +236,13 @@ def test_paged_page_size_invariance():
 
 def test_paged_falls_back_for_state_space_families():
     """rwkv has an O(1) recurrent state — nothing to page.  The flag
-    degrades to the contiguous engine with identical results."""
+    degrades to the contiguous engine with identical results, and the
+    silent downgrade is surfaced as a UserWarning."""
     mcfg = get_tiny("rwkv6-1.6b")
     params = _params("rwkv6-1.6b")
-    eng_p, res_p = _serve(mcfg, params, PROMPTS, MAX_NEW, max_batch=4,
-                          paged=True)
+    with pytest.warns(UserWarning, match="falling back"):
+        eng_p, res_p = _serve(mcfg, params, PROMPTS, MAX_NEW, max_batch=4,
+                              paged=True)
     eng_c, res_c = _serve(mcfg, params, PROMPTS, MAX_NEW, max_batch=4)
     assert not eng_p.paged
     assert res_p == res_c
@@ -302,6 +304,86 @@ def test_in_loop_admission_oracle():
     # never exceed the no-reuse worst case the plan provisioned
     assert paged.stats.kv_pages_peak <= sum(
         paging.pages_for(p + m, 4) for p, m in zip(plens, max_new))
+
+
+# ---------------------------------------------------------------------------
+# 4. flash-oversubscribed differential: every recovery stage bit-identical
+# ---------------------------------------------------------------------------
+
+
+def _tier(events=(), seed=1):
+    from repro.core.frac.wear import RecycledChip
+    from repro.serve.faults import FaultConfig
+    from repro.serve.flash_tier import FlashTier
+
+    return FlashTier(RecycledChip(n_blocks=64, seed=seed),
+                     faults=FaultConfig(seed=seed, rber_scale=0.0,
+                                        events=tuple(events)))
+
+
+OVERSUB_PROMPTS = [np.arange(1, 6, dtype=np.int32),
+                   np.arange(2, 12, dtype=np.int32),
+                   np.arange(3, 10, dtype=np.int32),
+                   np.arange(4, 11, dtype=np.int32),
+                   np.arange(5, 14, dtype=np.int32)]
+OVERSUB_MAX_NEW = [3, 6, 5, 4, 6]
+
+
+@pytest.mark.parametrize("kbits", [None, 8])
+def test_flash_oversub_bit_identical(kbits):
+    """Oversubscribed waves (spill -> flash -> fault-in) reproduce the
+    non-oversubscribed paged engine and solo serving token-for-token —
+    with and without FRAC KV — including a lane whose pages are LOST
+    on flash (recovery stage 3: re-prefill)."""
+    mcfg = get_tiny(ARCH)
+    params = _params()
+    kw = dict(max_batch=2, paged=True, page_size=4, stage_depth=8,
+              kv_frac_kbits=kbits)
+    base, res_b = _serve(mcfg, params, OVERSUB_PROMPTS, OVERSUB_MAX_NEW, **kw)
+    quiet, res_q = _serve(mcfg, params, OVERSUB_PROMPTS, OVERSUB_MAX_NEW,
+                          flash=_tier(), **kw)
+    assert res_q == res_b, f"oversubscribed diverged (kbits={kbits})"
+    assert quiet.stats.oversub_waves >= 2
+    assert quiet.stats.spills > 0
+    assert quiet.stats.faultins == quiet.stats.spills
+    # deepest ladder stage: a page lost on flash, lane re-prefilled
+    from repro.serve.faults import FaultEvent
+
+    lost, res_l = _serve(mcfg, params, OVERSUB_PROMPTS, OVERSUB_MAX_NEW,
+                         flash=_tier(events=(
+                             FaultEvent("bit_flip", at=1, severity=50.0),)),
+                         **kw)
+    assert res_l == res_b, f"re-prefill recovery diverged (kbits={kbits})"
+    assert lost.stats.reprefills >= 1 and lost.stats.reprefill_tokens > 0
+    # vs solo, spot-checked (paged == solo is locked exhaustively above)
+    for i in (1, 4):
+        _, (ref,) = _serve(mcfg, params, [OVERSUB_PROMPTS[i]],
+                           [OVERSUB_MAX_NEW[i]], max_batch=1,
+                           kv_frac_kbits=kbits)
+        assert res_q[i] == ref
+
+
+@pytest.mark.parametrize("sev,stage", [(0.5, "ecc"), (2.0, "retry")])
+def test_flash_oversub_mid_ladder_stages(sev, stage):
+    """Forced faults that resolve *within* the flash tier (ECC budget /
+    retry-read) never reach the token stream."""
+    from repro.serve.faults import FaultEvent
+
+    mcfg = get_tiny(ARCH)
+    params = _params()
+    kw = dict(max_batch=2, paged=True, page_size=4, stage_depth=8)
+    base, res_b = _serve(mcfg, params, OVERSUB_PROMPTS, OVERSUB_MAX_NEW, **kw)
+    eng, res = _serve(mcfg, params, OVERSUB_PROMPTS, OVERSUB_MAX_NEW,
+                      flash=_tier(events=(
+                          FaultEvent("bit_flip", at=1, severity=sev),
+                          FaultEvent("bit_flip", at=2, severity=sev))),
+                      **kw)
+    assert res == res_b
+    if stage == "ecc":
+        assert eng.stats.ecc_corrected >= 2 and eng.stats.retry_reads == 0
+    else:
+        assert eng.stats.retry_reads >= 2
+    assert eng.stats.reprefills == 0
 
 
 def test_paged_solo_degenerates_to_single_lane():
