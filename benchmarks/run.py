@@ -11,6 +11,8 @@ Prints ``name,value,derived`` CSV rows.  Mapping to the paper:
   bench_ese_estimates    Fig 4(a) estimator pipeline end-to-end
   bench_serve            serving decode tokens/s + J/token (device-
                          resident while_loop vs seed per-token sync)
+  bench_fleet            multi-region fleet replay: router-policy
+                         SLO-vs-gCO2/token Pareto + schema/identity gates
 
 Usage:
   python benchmarks/run.py [--sections frac,kernels] [--json [DIR]]
@@ -41,6 +43,7 @@ def main(argv: list[str] | None = None) -> None:
     from benchmarks import (
         bench_ese_estimates,
         bench_ese_wind,
+        bench_fleet,
         bench_frac,
         bench_frac_capacity,
         bench_kernels,
@@ -58,6 +61,7 @@ def main(argv: list[str] | None = None) -> None:
         ("roofline", bench_roofline),
         ("ese_estimates", bench_ese_estimates),
         ("serve", bench_serve),
+        ("fleet", bench_fleet),
     ]
     if args.sections:
         wanted = {s.strip() for s in args.sections.split(",") if s.strip()}

@@ -21,7 +21,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.power.nonvolatile import RuntimeCosts, simulate_progress
-from repro.core.power.scheduler import CarbonAwareScheduler, SchedulerConfig
+from repro.core.power.scheduler import Action, CarbonAwareScheduler, SchedulerConfig
 
 
 @dataclass(frozen=True)
@@ -48,21 +48,29 @@ GRID_KG_PER_KWH = 0.24
 
 
 def fleet_carbon(profile: AcceleratorProfile, supply_frac: np.ndarray,
-                 work_target: float = 1.0, fleet: int = 64) -> dict:
+                 work_target: float = 1.0, fleet: int = 64,
+                 scheduler_cfg: SchedulerConfig | None = None) -> dict:
     """Total carbon to serve the 3-workload mix over the trace."""
     n_fleets = 1 if profile.reconfigurable else N_WORKLOADS
     embodied = profile.embodied_kgco2 * fleet * n_fleets
 
     mode = {"none": "volatile", "partial": "nv-partial",
             "full": "verdant"}[profile.nonvolatile]
+    scfg = scheduler_cfg or SchedulerConfig(use_forecast=False)
+    sch = CarbonAwareScheduler(scfg)
     sim = simulate_progress(
         supply_frac, mode=mode,
         steps_per_interval=1500.0 * profile.perf_rel,
-        scheduler=CarbonAwareScheduler(SchedulerConfig(use_forecast=False)),
+        scheduler=sch,
     )
     progress = sim["final_steps"]
-    # energy: powered intervals draw device power (5-min intervals)
-    powered = (supply_frac > 0.25).sum()
+    # energy: powered intervals draw device power (5-min intervals).
+    # "Powered" is exactly the scheduler's non-PAUSE decisions — the
+    # same cutoff simulate_progress acted on — so the energy books and
+    # the progress sim can never disagree about when the fleet drew
+    # power (a hardcoded 0.25 here used to drift from threshold_frac).
+    powered = sum(d.action is not Action.PAUSE
+                  for d in sch.schedule(supply_frac))
     kwh = profile.power_w * fleet * powered * (5.0 / 60.0) / 1000.0
     operational = kwh * GRID_KG_PER_KWH * 0.2   # renewable-dominated grid
     return {
@@ -73,6 +81,7 @@ def fleet_carbon(profile: AcceleratorProfile, supply_frac: np.ndarray,
         "forward_progress": progress,
         "outages": sim["outages"],
         "rollover_steps": sim["rollover_steps"],
+        "powered_intervals": int(powered),
         "carbon_per_progress": (embodied + operational) / max(progress, 1.0),
     }
 

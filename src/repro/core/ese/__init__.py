@@ -14,18 +14,23 @@ from repro.core.ese.energy import LatencyHead, StepEnergy
 from repro.core.ese.estimator import estimate, estimate_task
 from repro.core.ese.meter import MeterConfig, SustainabilityMeter
 from repro.core.ese.records import (
+    FLEET_REPORT_SCHEMA,
     REPORT_SCHEMA,
     EnergyReport,
+    FleetReport,
     RooflineRecord,
     TaskSpec,
+    fleet_rollup,
     roofline_records,
+    validate_fleet_report_dict,
     validate_report_dict,
 )
 
 __all__ = [
-    "Bill", "EnergyReport", "HardwareUnit", "LatencyHead", "MeterConfig",
+    "Bill", "EnergyReport", "FLEET_REPORT_SCHEMA", "FleetReport",
+    "HardwareUnit", "LatencyHead", "MeterConfig",
     "REPORT_SCHEMA", "RooflineRecord", "StepEnergy", "SustainabilityMeter",
     "TaskFootprint", "TaskSpec", "billing", "embodied", "energy",
-    "estimate", "estimate_task", "estimator", "predictor",
-    "roofline_records", "validate_report_dict",
+    "estimate", "estimate_task", "estimator", "fleet_rollup", "predictor",
+    "roofline_records", "validate_fleet_report_dict", "validate_report_dict",
 ]

@@ -264,6 +264,167 @@ class EnergyReport:
         )
 
 
+FLEET_REPORT_SCHEMA = "ese-fleet-report/v1"
+
+
+@dataclass(frozen=True)
+class FleetReport:
+    """Fleet-level sustainability rollup: one cumulative
+    ``EnergyReport`` per grid region (each region's
+    ``SustainabilityMeter`` books at its own trace's carbon intensity),
+    summed into fleet totals.  Emitted by ``serve/fleet.py`` /
+    ``serve/replay.py``; serializes to the stable
+    ``ese-fleet-report/v1`` JSON schema alongside the per-job
+    ``ese-energy-report/v1`` (each region entry IS a v1 report).
+    """
+    regions: dict                    # region name -> EnergyReport
+    policy: str = "unknown"          # router policy that produced it
+    requests: int = 0
+    tokens: int = 0
+    slo_attainment: float | None = None   # fraction within SLO, if known
+    detail: dict = field(default_factory=dict, compare=False)
+
+    def __post_init__(self):
+        if not self.regions:
+            raise ValueError("FleetReport: key 'regions' must be non-empty")
+        for name, rep in self.regions.items():
+            if not isinstance(rep, EnergyReport):
+                raise ValueError(
+                    f"FleetReport: region {name!r} must be an EnergyReport, "
+                    f"got {type(rep).__name__}")
+        if self.slo_attainment is not None \
+                and not 0.0 <= self.slo_attainment <= 1.0:
+            raise ValueError(
+                "FleetReport: key 'slo_attainment' must be in [0, 1], "
+                f"got {self.slo_attainment}")
+
+    # -- rolled-up totals ----------------------------------------------------
+    @property
+    def operational_j(self) -> float:
+        return sum(r.operational_j for r in self.regions.values())
+
+    @property
+    def embodied_j(self) -> float:
+        return sum(r.embodied_j for r in self.regions.values())
+
+    @property
+    def co2_operational_kg(self) -> float:
+        return sum(r.co2_operational_kg for r in self.regions.values())
+
+    @property
+    def co2_embodied_kg(self) -> float:
+        return sum(r.co2_embodied_kg for r in self.regions.values())
+
+    @property
+    def co2_kg(self) -> float:
+        return self.co2_operational_kg + self.co2_embodied_kg
+
+    @property
+    def bill_usd(self) -> float:
+        return sum(r.bill_usd for r in self.regions.values())
+
+    def gco2_per_token(self, *, operational_only: bool = True) -> float:
+        """Grams CO2 per served token — the fleet Pareto's y-axis.
+        Operational-only by default: embodied charges are occupancy ×
+        constants, near-identical across router policies, so including
+        them only flattens policy contrast."""
+        kg = (self.co2_operational_kg if operational_only else self.co2_kg)
+        return 1e3 * kg / max(self.tokens, 1)
+
+    def to_json_dict(self) -> dict:
+        return {
+            "schema": FLEET_REPORT_SCHEMA,
+            "policy": self.policy,
+            "requests": self.requests,
+            "tokens": self.tokens,
+            "slo_attainment": self.slo_attainment,
+            "totals": {
+                "operational_j": self.operational_j,
+                "embodied_j": self.embodied_j,
+                "total_j": self.operational_j + self.embodied_j,
+                "co2_kg": {
+                    "operational": self.co2_operational_kg,
+                    "embodied": self.co2_embodied_kg,
+                    "total": self.co2_kg,
+                },
+                "bill_usd": self.bill_usd,
+                "gco2_per_token": self.gco2_per_token(),
+            },
+            "regions": {name: rep.to_json_dict()
+                        for name, rep in self.regions.items()},
+            "detail": dict(self.detail),
+        }
+
+    @classmethod
+    def from_json_dict(cls, d: Mapping) -> "FleetReport":
+        validate_fleet_report_dict(d)
+        return cls(
+            regions={name: EnergyReport.from_json_dict(rep)
+                     for name, rep in d["regions"].items()},
+            policy=d["policy"],
+            requests=int(d["requests"]),
+            tokens=int(d["tokens"]),
+            slo_attainment=(None if d.get("slo_attainment") is None
+                            else float(d["slo_attainment"])),
+            detail=dict(d.get("detail", {})),
+        )
+
+
+def fleet_rollup(regions: Mapping[str, "EnergyReport"], *,
+                 policy: str = "unknown", requests: int = 0,
+                 tokens: int = 0, slo_attainment: float | None = None,
+                 detail: dict | None = None) -> FleetReport:
+    """Roll per-region cumulative EnergyReports (one per
+    ``SustainabilityMeter.report()``) into one FleetReport."""
+    return FleetReport(regions=dict(regions), policy=policy,
+                       requests=int(requests), tokens=int(tokens),
+                       slo_attainment=slo_attainment,
+                       detail=dict(detail or {}))
+
+
+def validate_fleet_report_dict(d: Mapping) -> None:
+    """Validate the ese-fleet-report/v1 JSON shape; raises ValueError
+    naming the missing/ill-typed key on schema drift.  Every region
+    entry is additionally validated as an ese-energy-report/v1."""
+    if not isinstance(d, Mapping):
+        raise ValueError(
+            f"FleetReport: expects a mapping, got {type(d).__name__}")
+    if d.get("schema") != FLEET_REPORT_SCHEMA:
+        raise ValueError(
+            f"FleetReport: key 'schema' must be {FLEET_REPORT_SCHEMA!r}, "
+            f"got {d.get('schema')!r}")
+    if "policy" not in d or not isinstance(d["policy"], str):
+        raise ValueError("FleetReport: missing or non-string key 'policy'")
+    for k in ("requests", "tokens"):
+        _require_int("FleetReport", d, k)
+    if d.get("slo_attainment") is not None:
+        v = _require_number("FleetReport", d, "slo_attainment")
+        if not 0.0 <= v <= 1.0:
+            raise ValueError(
+                f"FleetReport: key 'slo_attainment' must be in [0, 1], "
+                f"got {v}")
+    if "totals" not in d or not isinstance(d["totals"], Mapping):
+        raise ValueError("FleetReport: missing or non-mapping key 'totals'")
+    tot = d["totals"]
+    for k in ("operational_j", "embodied_j", "total_j", "bill_usd",
+              "gco2_per_token"):
+        _require_number("FleetReport totals", tot, k)
+    if "co2_kg" not in tot or not isinstance(tot["co2_kg"], Mapping):
+        raise ValueError(
+            "FleetReport totals: missing or non-mapping key 'co2_kg'")
+    for k in ("operational", "embodied", "total"):
+        _require_number("FleetReport totals co2_kg", tot["co2_kg"], k)
+    if "regions" not in d or not isinstance(d["regions"], Mapping) \
+            or not d["regions"]:
+        raise ValueError(
+            "FleetReport: missing, non-mapping or empty key 'regions'")
+    for name, rep in d["regions"].items():
+        try:
+            validate_report_dict(rep)
+        except ValueError as e:
+            raise ValueError(f"FleetReport region {name!r}: {e}") from e
+
+
 def validate_report_dict(d: Mapping) -> None:
     """Validate the ese-energy-report/v1 JSON shape; raises ValueError
     naming the missing/ill-typed key on schema drift."""

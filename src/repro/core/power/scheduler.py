@@ -7,11 +7,23 @@ rate + stronger FRAC gradient compression), or snapshot-and-pause.  The
 threshold power with zero rollover on power loss — is what
 NonvolatileRuntime (nonvolatile.py) provides; this module decides *when*
 to invoke it.
+
+Forecasts: ``decide`` accepts either a single scalar forecast fraction
+(already reduced to one number by the caller) or a mapping of
+``{quantile: forecast_frac}`` — the predictor's simultaneous quantile
+outputs (core/ese/predictor.py emits P2.5..P97.5).  Given a mapping,
+the scheduler acts on the quantile closest to
+``SchedulerConfig.forecast_quantile`` (exact match preferred), so a
+conservative config (low quantile) reacts to the pessimistic edge of
+the forecast band and an optimistic one to the median.  The serving
+fleet's router (serve/router.py) reads the same config field, so the
+dispatch layer and the derate layer act on one consistent forecast.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from enum import Enum
+from typing import Mapping
 
 import numpy as np
 
@@ -30,6 +42,24 @@ class SchedulerConfig:
     use_forecast: bool = True         # act on predicted (vs current) supply
     forecast_quantile: float = 0.25   # act on a conservative quantile
 
+    def __post_init__(self):
+        # fail at construction, not inside decide(): threshold ==
+        # full_power divides by zero there, and an inverted pair yields
+        # negative / >1 step scales that silently corrupt every derate
+        if not 0.0 <= self.threshold_frac < self.full_power_frac:
+            raise ValueError(
+                "SchedulerConfig: need 0 <= threshold_frac < "
+                f"full_power_frac, got threshold_frac={self.threshold_frac} "
+                f"full_power_frac={self.full_power_frac}")
+        if not 0.0 < self.derate_step_scale <= 1.0:
+            raise ValueError(
+                "SchedulerConfig: key 'derate_step_scale' must be in "
+                f"(0, 1], got {self.derate_step_scale}")
+        if not 0.0 <= self.forecast_quantile <= 1.0:
+            raise ValueError(
+                "SchedulerConfig: key 'forecast_quantile' must be in "
+                f"[0, 1], got {self.forecast_quantile}")
+
 
 @dataclass
 class Decision:
@@ -44,26 +74,57 @@ class CarbonAwareScheduler:
     def __init__(self, cfg: SchedulerConfig | None = None):
         self.cfg = cfg or SchedulerConfig()
 
-    def decide(self, supply_frac: float,
-               forecast_frac: float | None = None) -> Decision:
+    def _forecast_frac(self, forecast) -> float:
+        """Reduce a forecast to the one fraction decide() acts on: a
+        scalar passes through; a ``{quantile: frac}`` mapping (the
+        predictor's simultaneous quantile heads) selects the entry
+        nearest ``cfg.forecast_quantile`` (ties go to the lower, more
+        conservative quantile)."""
+        if isinstance(forecast, Mapping):
+            if not forecast:
+                raise ValueError(
+                    "forecast quantile mapping is empty — pass None to "
+                    "act on current supply only")
+            q = min(forecast,
+                    key=lambda k: (abs(float(k) - self.cfg.forecast_quantile),
+                                   float(k)))
+            return float(forecast[q])
+        return float(forecast)
+
+    def decide(self, supply_frac: float, forecast_frac=None) -> Decision:
         c = self.cfg
         s = supply_frac
         if c.use_forecast and forecast_frac is not None:
-            s = min(s, forecast_frac)   # conservative: act before the dip
+            # conservative: act before the dip
+            s = min(s, self._forecast_frac(forecast_frac))
         if s >= c.full_power_frac:
             return Decision(Action.RUN, 1.0, 16)
         if s >= c.threshold_frac:
-            # scale with available power; compress gradients harder
+            # scale with available power; compress gradients harder.
+            # __post_init__ guarantees the denominator is positive; the
+            # clamp keeps the scale lawful even for supply glitches
+            # outside [threshold, full) (e.g. float round-off at the
+            # boundaries).
             scale = c.derate_step_scale + (1 - c.derate_step_scale) * (
                 (s - c.threshold_frac) / (c.full_power_frac - c.threshold_frac)
             )
+            scale = min(max(scale, c.derate_step_scale), 1.0)
             return Decision(Action.DERATE, float(scale), 6)
         return Decision(Action.PAUSE, 0.0, 4)
 
     def schedule(self, supply: np.ndarray,
-                 forecast: np.ndarray | None = None) -> list[Decision]:
+                 forecast=None) -> list[Decision]:
+        """Per-interval decisions over a supply series.  ``forecast``
+        is optional: an aligned array of scalar forecasts, or a
+        ``{quantile: aligned array}`` mapping — each interval then acts
+        on its own quantile slice (see ``decide``)."""
         out = []
         for i, s in enumerate(supply):
-            f = None if forecast is None else float(forecast[i])
+            if forecast is None:
+                f = None
+            elif isinstance(forecast, Mapping):
+                f = {float(q): float(v[i]) for q, v in forecast.items()}
+            else:
+                f = float(forecast[i])
             out.append(self.decide(float(s), f))
         return out

@@ -96,6 +96,24 @@ def datacenter_supply(trace: GridTrace, *, dc_peak_mw: float = 30.0,
     return np.clip(dc_peak_mw * frac * renewable_share, 0, dc_peak_mw)
 
 
+def quantile_forecast(series: np.ndarray, *, horizon: int = 3,
+                      quantiles: tuple[float, ...] = (0.25, 0.5, 0.75)
+                      ) -> dict[float, np.ndarray]:
+    """Cheap per-interval quantile forecast bands over ``series``:
+    ``{q: aligned array}`` where entry ``i`` is quantile ``q`` of the
+    next ``horizon`` intervals.  A stand-in for the LSTM predictor's
+    simultaneous quantile heads (core/ese/predictor.py) with the same
+    shape contract ``CarbonAwareScheduler.schedule(forecast=...)`` and
+    the fleet router consume — low quantiles are the pessimistic edge
+    of the band, so a conservative ``forecast_quantile`` reacts before
+    a dip."""
+    s = np.asarray(series, float)
+    n = len(s)
+    win = np.stack([s[np.minimum(np.arange(n) + 1 + h, n - 1)]
+                    for h in range(max(horizon, 1))])
+    return {float(q): np.quantile(win, q, axis=0) for q in quantiles}
+
+
 def calendar_features(n: int) -> np.ndarray:
     """(n, 6) calendar inputs for the predictor: sin/cos of day phase,
     week phase, and a linear ramp."""

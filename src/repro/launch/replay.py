@@ -1,0 +1,95 @@
+"""Fleet trace-replay launcher: synthetic request traces routed across
+carbon-skewed region replicas (serve/fleet.py + serve/replay.py).
+
+    # fast analytic replay — 200k requests through the service model
+    PYTHONPATH=src python -m repro.launch.replay --mode model \
+        --requests 200000 --policy greenest
+
+    # real engines — every request decoded, outputs exact
+    PYTHONPATH=src python -m repro.launch.replay --mode engine \
+        --arch llama3.2-3b --requests 24 --policy carbon_latency
+
+Prints one summary line per run plus the ``ese-fleet-report/v1`` JSON
+(with ``--json``); sweep policies with benchmarks/bench_fleet.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import ARCH_IDS, get_tiny
+from repro.core.power.scheduler import SchedulerConfig
+from repro.serve.fleet import ServeFleet, skewed_region_pair
+from repro.serve.replay import ReplayConfig, replay_engine, replay_model
+from repro.serve.router import POLICIES
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("model", "engine"), default="model",
+                    help="'model': analytic service model, six-figure "
+                         "request counts; 'engine': real paged serve "
+                         "engines, exact outputs")
+    ap.add_argument("--arch", default="llama3.2-3b", choices=list(ARCH_IDS),
+                    help="tiny-config architecture (engine mode)")
+    ap.add_argument("--policy", default="carbon_latency",
+                    choices=list(POLICIES))
+    ap.add_argument("--requests", type=int, default=20000)
+    ap.add_argument("--days", type=int, default=2,
+                    help="simulated grid-trace days per region")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--diurnal-amp", type=float, default=0.6)
+    ap.add_argument("--slo-s", type=float, default=900.0,
+                    help="completion deadline on the simulated clock")
+    ap.add_argument("--pause-policy", choices=("serve_min", "hold"),
+                    default="serve_min")
+    ap.add_argument("--use-forecast", action="store_true",
+                    help="schedulers derate on the quantile forecast "
+                         "band instead of the instantaneous supply")
+    ap.add_argument("--forecast-quantile", type=float, default=None,
+                    help="which forecast quantile decide() acts on")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="decode lanes per region bucket (engine mode)")
+    ap.add_argument("--json", action="store_true",
+                    help="also print the fleet report JSON")
+    args = ap.parse_args()
+
+    regions = skewed_region_pair(days=args.days, seed=args.seed)
+    cfg = ReplayConfig(n_requests=args.requests, seed=args.seed,
+                       diurnal_amp=args.diurnal_amp, slo_s=args.slo_s)
+    skw = {}
+    if args.forecast_quantile is not None:
+        skw["forecast_quantile"] = args.forecast_quantile
+    scfg = SchedulerConfig(use_forecast=args.use_forecast, **skw)
+
+    if args.mode == "model":
+        res = replay_model(regions, cfg, policy=args.policy, seed=args.seed,
+                           scheduler_cfg=scfg,
+                           pause_policy=args.pause_policy)
+    else:
+        import jax
+
+        from repro.models import model
+
+        mcfg = get_tiny(args.arch)
+        params = model.init_params(mcfg, jax.random.PRNGKey(0))
+        fleet = ServeFleet(mcfg, params, regions, policy=args.policy,
+                           seed=args.seed, scheduler_cfg=scfg,
+                           pause_policy=args.pause_policy,
+                           max_batch=args.max_batch, paged=True)
+        res = replay_engine(fleet, cfg)
+
+    rep = res.report
+    print(f"mode={args.mode} policy={args.policy} "
+          f"requests={rep.requests} tokens={rep.tokens} "
+          f"regions={list(rep.regions)}")
+    print(f"slo_attainment={res.slo_attainment:.4f} "
+          f"gco2_per_token={res.gco2_per_token:.5f} "
+          f"co2_kg={rep.co2_kg:.4f} bill_usd={rep.bill_usd:.4f}")
+    print(f"dispatch={res.dispatch_counts}")
+    if args.json:
+        print(json.dumps(rep.to_json_dict(), indent=2, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

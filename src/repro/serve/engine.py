@@ -399,6 +399,12 @@ class ServeEngine:
         self._prefill = jax.jit(self._prefill_fn)
         self._loops: dict[tuple, object] = {}
 
+    @property
+    def queue_depth(self) -> int:
+        """Requests submitted but not yet completed — the load signal
+        the fleet router (serve/router.py) scores regions on."""
+        return len(self._pending)
+
     # -- admission -----------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                max_wall_s: float | None = None) -> int:

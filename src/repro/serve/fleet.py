@@ -1,0 +1,282 @@
+"""Carbon-aware multi-replica serving fleet.
+
+N paged serve-engine replicas, each pinned to a simulated grid region —
+its own ``GridTrace`` (per-interval ``carbon_intensity_kg_per_kwh``),
+its own ``datacenter_supply`` headroom, its own ``SustainabilityMeter``
+booking at that region's intensity, and its own
+``CarbonAwareScheduler`` — behind a ``Router`` (serve/router.py) that
+scores every incoming request across regions and dispatches it at
+submit time.  *Where and when* work runs dominates its footprint
+(Chasing Carbon, PAPERS.md); this module is the dispatch half of that
+story, with the per-engine efficiency half already built (serve/
+engine.py).
+
+Region model (docs/fleet.md):
+
+  - simulated time advances in grid-trace intervals (5 min); the fleet
+    holds one global ``interval`` cursor that the replay harness
+    (serve/replay.py) drives;
+  - each interval, a region's scheduler turns its supply fraction (and
+    optionally a quantile forecast band — the same
+    ``forecast_quantile`` the router config names) into a Decision
+    that **derates the region's bucket width**: effective ``max_batch``
+    = round(base × step_scale).  A serving region cannot PAUSE
+    indefinitely the way a training job can (it is grid-connected and
+    has queued users), so PAUSE shrinks the region to a single decode
+    lane by default (``pause_policy="serve_min"``) — the router sees
+    the tiny width through the queue signal and steers new work away —
+    or genuinely holds the queue (``pause_policy="hold"``) for
+    follow-the-renewables studies that tolerate unbounded queueing;
+  - routing never changes tokens: each request is served whole by one
+    replica whose engine outputs are bit-identical to a solo engine
+    (locked by tests/test_fleet.py), so the router only moves carbon
+    and latency, never numerics.
+
+Per-region meters roll up into one ``FleetReport``
+(``ese-fleet-report/v1``, core/ese/records.py) via ``fleet_report()``.
+"""
+from __future__ import annotations
+
+import time
+import warnings
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.ese.meter import SustainabilityMeter
+from repro.core.ese.records import FleetReport, fleet_rollup
+from repro.core.power import traces
+from repro.core.power.scheduler import (
+    Action,
+    CarbonAwareScheduler,
+    Decision,
+    SchedulerConfig,
+)
+from repro.models import model
+from repro.serve.engine import ServeEngine
+from repro.serve.router import RegionSnapshot, Router
+
+# The meter's interval cursor advances by one per booked request; the
+# fleet pins it to the *simulated* grid interval instead by seeking to
+# interval * CURSOR_STRIDE before each drain — any drain smaller than
+# the stride then books every request at that interval's intensity.
+CURSOR_STRIDE = 1 << 20
+
+
+@dataclass(frozen=True)
+class RegionSpec:
+    """One simulated grid region a replica is pinned to."""
+    name: str
+    trace: traces.GridTrace
+    dc_peak_mw: float = 30.0
+    tokens_per_s_hint: float = 200.0   # router estimate before any bucket
+
+    def supply_frac(self) -> np.ndarray:
+        """Per-interval available power / data-center peak (0..1)."""
+        return traces.datacenter_supply(
+            self.trace, dc_peak_mw=self.dc_peak_mw) / self.dc_peak_mw
+
+    def intensity(self) -> np.ndarray:
+        return np.asarray(self.trace.carbon_intensity_kg_per_kwh)
+
+
+def skewed_region_pair(days: int = 2, seed: int = 0) -> list[RegionSpec]:
+    """The benchmark/CI two-region fixture: one renewable-rich region
+    whose intensity is ~0 through the solar day, one fossil-heavy
+    region sitting near the gas-peaker marginal intensity — the skew
+    that makes ``greenest`` strictly beat ``round_robin`` on
+    gCO2/token."""
+    green = traces.make_trace(days=days, seed=seed, solar_peak=30000.0,
+                              wind_mean=12000.0, demand_base=16000.0)
+    dirty = traces.make_trace(days=days, seed=seed + 1, solar_peak=1500.0,
+                              wind_mean=800.0, demand_base=26000.0)
+    return [RegionSpec("green", green), RegionSpec("dirty", dirty)]
+
+
+class RegionReplica:
+    """One serve-engine replica pinned to a grid region."""
+
+    def __init__(self, spec: RegionSpec, mcfg: ModelConfig, params, *,
+                 scheduler: CarbonAwareScheduler | None = None,
+                 pause_policy: str = "serve_min",
+                 forecast_quantiles=None, **engine_kwargs):
+        if pause_policy not in ("serve_min", "hold"):
+            raise ValueError(
+                f"pause_policy must be 'serve_min' or 'hold', "
+                f"got {pause_policy!r}")
+        self.spec = spec
+        self.supply = spec.supply_frac()
+        self.intensity = spec.intensity()
+        self.scheduler = scheduler or CarbonAwareScheduler(
+            SchedulerConfig(use_forecast=False))
+        self.pause_policy = pause_policy
+        # {quantile: aligned series} — the band both the scheduler
+        # (decide) and any forecast-aware routing read, so dispatch and
+        # derate act on the SAME conservative quantile
+        self.forecast_quantiles = forecast_quantiles
+        self.meter = SustainabilityMeter.from_trace(
+            spec.trace, steps_per_interval=CURSOR_STRIDE,
+            name=f"fleet/{spec.name}")
+        self.engine = ServeEngine(mcfg, params, meter=self.meter,
+                                  **engine_kwargs)
+        self.base_max_batch = self.engine.max_batch
+        self.tokens_per_s = float(spec.tokens_per_s_hint)
+        self.decisions: list[Decision] = []   # one per drained interval
+
+    # -- per-interval state --------------------------------------------------
+    def _at(self, series: np.ndarray, interval: int) -> float:
+        return float(series[min(interval, len(series) - 1)])
+
+    def carbon_intensity(self, interval: int) -> float:
+        return self._at(self.intensity, interval)
+
+    def headroom(self, interval: int) -> float:
+        return self._at(self.supply, interval)
+
+    def snapshot(self, interval: int) -> RegionSnapshot:
+        return RegionSnapshot(
+            name=self.spec.name,
+            carbon_intensity=self.carbon_intensity(interval),
+            queue_depth=self.engine.queue_depth,
+            tokens_per_s=self.tokens_per_s,
+            headroom=self.headroom(interval),
+        )
+
+    def decision(self, interval: int) -> Decision:
+        f = None
+        if self.scheduler.cfg.use_forecast \
+                and self.forecast_quantiles is not None:
+            f = {float(q): self._at(v, interval)
+                 for q, v in self.forecast_quantiles.items()}
+        return self.scheduler.decide(self.headroom(interval), f)
+
+    def effective_max_batch(self, d: Decision) -> int:
+        """Scheduler-derated bucket width for this interval."""
+        if d.action is Action.PAUSE:
+            return 1 if self.pause_policy == "serve_min" else 0
+        return max(1, int(round(self.base_max_batch * d.step_scale)))
+
+    # -- serving -------------------------------------------------------------
+    def drain(self, interval: int) -> int:
+        """Serve everything pending at this interval's derated bucket
+        width, booking carbon at this interval's grid intensity.
+        Returns requests completed (0 under a held PAUSE)."""
+        if self.engine.queue_depth == 0:
+            return 0
+        d = self.decision(interval)
+        self.decisions.append(d)
+        width = self.effective_max_batch(d)
+        if width == 0:                      # pause_policy="hold"
+            return 0
+        self.engine.max_batch = width
+        self.meter.seek(interval * CURSOR_STRIDE)
+        tok0 = self.engine.stats.tokens
+        req0 = len(self.engine.reports)
+        t0 = time.perf_counter()
+        self.engine.run()
+        dt = time.perf_counter() - t0
+        served_tokens = self.engine.stats.tokens - tok0
+        if served_tokens > 0 and dt > 0:
+            tps = served_tokens / dt
+            self.tokens_per_s = 0.7 * self.tokens_per_s + 0.3 * tps
+        return len(self.engine.reports) - req0
+
+
+class ServeFleet:
+    """Router + N region replicas sharing one model's params."""
+
+    def __init__(self, mcfg: ModelConfig, params,
+                 regions: list[RegionSpec], *,
+                 policy: str = "carbon_latency", router: Router | None = None,
+                 seed: int = 0, scheduler_cfg: SchedulerConfig | None = None,
+                 pause_policy: str = "serve_min", paged: bool = True,
+                 use_forecast: bool = False, **engine_kwargs):
+        if not regions:
+            raise ValueError("ServeFleet needs at least one region")
+        if paged and not model.supports_paged(mcfg):
+            warnings.warn(
+                f"fleet paged=True but family {mcfg.family!r} does not "
+                "support a paged KV cache; replicas serve contiguous "
+                "(outputs identical).", UserWarning, stacklevel=2)
+            paged = False
+        self.mcfg = mcfg
+        self.router = router or Router(policy, seed=seed)
+        self.interval = 0
+        self.replicas: list[RegionReplica] = []
+        for spec in regions:
+            scfg = scheduler_cfg or SchedulerConfig(use_forecast=use_forecast)
+            fq = None
+            if scfg.use_forecast:
+                fq = traces.quantile_forecast(spec.supply_frac())
+            self.replicas.append(RegionReplica(
+                spec, mcfg, params,
+                scheduler=CarbonAwareScheduler(scfg),
+                pause_policy=pause_policy, forecast_quantiles=fq,
+                paged=paged, **engine_kwargs))
+        self._route: dict[int, tuple[int, int]] = {}  # rid -> (replica, lrid)
+        self.dispatch_trace: list[tuple[int, str]] = []
+        self._next_rid = 0
+
+    def set_interval(self, interval: int) -> None:
+        """Advance simulated grid time (the replay harness drives this)."""
+        self.interval = int(interval)
+
+    # -- dispatch ------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               **kw) -> int:
+        """Route one request to a region at the current interval and
+        enqueue it there.  Returns a fleet-global request id."""
+        snaps = [r.snapshot(self.interval) for r in self.replicas]
+        ri = self.router.pick(snaps)
+        lrid = self.replicas[ri].engine.submit(prompt, max_new_tokens, **kw)
+        rid = self._next_rid
+        self._next_rid += 1
+        self._route[rid] = (ri, lrid)
+        self.dispatch_trace.append((rid, self.replicas[ri].spec.name))
+        return rid
+
+    # -- serving -------------------------------------------------------------
+    def run(self) -> dict[int, list[int]]:
+        """Drain every region at the current interval (each region's
+        scheduler derates its own bucket width; carbon books at its own
+        intensity), then return all completed results so far keyed by
+        fleet rid."""
+        for r in self.replicas:
+            r.drain(self.interval)
+        return self.results()
+
+    def results(self) -> dict[int, list[int]]:
+        out = {}
+        for rid, (ri, lrid) in self._route.items():
+            res = self.replicas[ri].engine._results
+            if lrid in res:
+                out[rid] = res[lrid]
+        return out
+
+    @property
+    def queue_depth(self) -> int:
+        return sum(r.engine.queue_depth for r in self.replicas)
+
+    def dispatch_counts(self) -> dict[str, int]:
+        counts = {r.spec.name: 0 for r in self.replicas}
+        for _, name in self.dispatch_trace:
+            counts[name] += 1
+        return counts
+
+    # -- rollup --------------------------------------------------------------
+    def fleet_report(self, *, slo_attainment: float | None = None,
+                     detail: dict | None = None) -> FleetReport:
+        """Roll every region meter's cumulative EnergyReport into one
+        ``ese-fleet-report/v1`` record."""
+        extra = {"dispatch_counts": self.dispatch_counts(),
+                 "intervals": self.interval + 1}
+        extra.update(detail or {})
+        return fleet_rollup(
+            {r.spec.name: r.meter.report() for r in self.replicas},
+            policy=self.router.policy,
+            requests=sum(r.engine.stats.requests for r in self.replicas),
+            tokens=sum(r.engine.stats.tokens for r in self.replicas),
+            slo_attainment=slo_attainment,
+            detail=extra,
+        )

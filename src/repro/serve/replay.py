@@ -1,0 +1,315 @@
+"""Trace-replay harness: Poisson/diurnal arrivals over a fleet.
+
+Drives a carbon-aware serving fleet (serve/fleet.py) with a synthetic
+request trace replayed against the regions' grid traces, and rolls the
+result into one ``ese-fleet-report/v1`` FleetReport plus per-request
+latency / SLO-attainment series — the inputs to the
+SLO-vs-gCO2/token Pareto sweep (benchmarks/bench_fleet.py).
+
+Arrivals are an inhomogeneous Poisson process conditioned on the total
+request count: the diurnal rate ``1 + amp·cos(day phase)`` peaks at
+``peak_hour``, its cumulative intensity is inverted over sorted
+uniforms (fixed seed → identical arrival times), and request shapes
+(prompt length, max_new) draw from their own seeded stream so the same
+trace replays bit-identically across modes and policies.
+
+Two modes:
+
+  ``replay_engine(fleet, cfg)``  every request runs through the real
+      paged serve engines in batched super-bucket waves — one drain
+      per region per 5-min interval, outputs bit-identical to solo
+      serving (the differential tests ride this mode).  Use for
+      correctness runs and CI smoke (dozens–hundreds of requests).
+
+  ``replay_model(regions, cfg, policy=...)``  no engines: each region
+      is a calibrated FIFO server (``tokens_per_s`` × the scheduler's
+      per-interval derate scale) whose busy seconds book through the
+      same per-region ``SustainabilityMeter`` at the same per-interval
+      intensity.  This is how the Pareto sweep replays hundreds of
+      thousands of requests in seconds.  Service that would cross an
+      interval boundary waits for the next interval (service times are
+      ≪ one interval, so the quantization error is bounded by one
+      request per region-interval).
+
+Simulated time is the grid-trace interval grid (5 min); a request's
+latency is its completion time minus its arrival time on that clock,
+and ``slo_attainment`` is the fraction of requests finishing within
+``cfg.slo_s``.  Queues left at trace end keep draining against the
+final interval's conditions for a bounded number of extra intervals;
+requests still unserved then (possible only under ``pause_policy=
+"hold"``) count as SLO misses with infinite latency.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.ese.meter import SustainabilityMeter
+from repro.core.ese.records import FleetReport, fleet_rollup
+from repro.core.power import traces
+from repro.core.power.scheduler import (
+    Action,
+    CarbonAwareScheduler,
+    SchedulerConfig,
+)
+from repro.serve.fleet import CURSOR_STRIDE, RegionSpec, ServeFleet
+from repro.serve.router import RegionSnapshot, Router
+
+INTERVAL_S = traces.STEP_MIN * 60.0
+MAX_DRAIN_EXTRA = 288            # ≤ one extra simulated day to empty queues
+
+
+@dataclass(frozen=True)
+class ReplayConfig:
+    n_requests: int = 2000
+    seed: int = 0
+    diurnal_amp: float = 0.6     # arrival-rate swing over the day (0..1)
+    peak_hour: float = 18.0      # arrival peak (evening, like the demand ramp)
+    prompt_len: tuple[int, int] = (4, 12)    # uniform [lo, hi]
+    max_new: tuple[int, int] = (4, 12)
+    slo_s: float = 900.0         # completion deadline on the simulated clock
+
+    def __post_init__(self):
+        if self.n_requests < 1:
+            raise ValueError(
+                f"ReplayConfig: n_requests must be >= 1, got {self.n_requests}")
+        if not 0.0 <= self.diurnal_amp < 1.0:
+            raise ValueError(
+                "ReplayConfig: diurnal_amp must be in [0, 1), "
+                f"got {self.diurnal_amp}")
+
+
+@dataclass
+class ReplayResult:
+    report: FleetReport
+    latency_s: np.ndarray        # per request, inf = never served
+    slo_attainment: float
+    gco2_per_token: float
+    dispatch_counts: dict
+    outputs: dict | None = None  # engine mode: fleet rid -> tokens
+
+
+def arrival_times(cfg: ReplayConfig, n_intervals: int) -> np.ndarray:
+    """Sorted arrival seconds over ``n_intervals`` of simulated time:
+    inverse-CDF sampling of the diurnal cumulative intensity, so the
+    draw is an inhomogeneous Poisson process conditioned on exactly
+    ``cfg.n_requests`` arrivals."""
+    rng = np.random.default_rng(cfg.seed)
+    t = np.arange(n_intervals)
+    hour = (t * traces.STEP_MIN / 60.0) % 24
+    rate = 1.0 + cfg.diurnal_amp * np.cos(
+        (hour - cfg.peak_hour) / 24.0 * 2.0 * np.pi)
+    cum = np.concatenate([[0.0], np.cumsum(rate)])
+    u = np.sort(rng.random(cfg.n_requests)) * cum[-1]
+    return np.interp(u, cum, np.arange(n_intervals + 1)) * INTERVAL_S
+
+
+def request_shapes(cfg: ReplayConfig) -> tuple[np.ndarray, np.ndarray]:
+    """(prompt_len, max_new) per request from their own seeded stream
+    (arrivals keep their stream, so shapes don't perturb timing)."""
+    rng = np.random.default_rng(cfg.seed + 1)
+    plens = rng.integers(cfg.prompt_len[0], cfg.prompt_len[1] + 1,
+                         cfg.n_requests)
+    mnews = rng.integers(cfg.max_new[0], cfg.max_new[1] + 1, cfg.n_requests)
+    return plens.astype(np.int64), mnews.astype(np.int64)
+
+
+def _slo(latency: np.ndarray, slo_s: float) -> float:
+    return float((latency <= slo_s).mean())
+
+
+# ---------------------------------------------------------------------------
+# engine mode
+# ---------------------------------------------------------------------------
+def replay_engine(fleet: ServeFleet, cfg: ReplayConfig) -> ReplayResult:
+    """Replay the trace through the real serve engines: per interval,
+    route that interval's arrivals, then drain every region in batched
+    super-bucket waves at its scheduler-derated width."""
+    n_int = min(len(r.supply) for r in fleet.replicas)
+    arr = arrival_times(cfg, n_int)
+    plens, mnews = request_shapes(cfg)
+    prompt_rng = np.random.default_rng(cfg.seed + 2)
+    vocab = fleet.mcfg.vocab_size
+    n = cfg.n_requests
+    rid_of = np.full(n, -1, np.int64)
+    completion = np.full(n, np.inf)
+    first = np.searchsorted(arr, np.arange(n_int) * INTERVAL_S)
+    nxt = 0
+
+    i = 0
+    while i < n_int + MAX_DRAIN_EXTRA:
+        iv = min(i, n_int - 1)
+        fleet.set_interval(iv)
+        end = first[i + 1] if i + 1 < n_int else n
+        while nxt < min(end, n):
+            prompt = prompt_rng.integers(
+                1, vocab, plens[nxt]).astype(np.int32)
+            rid_of[nxt] = fleet.submit(prompt, max_new_tokens=int(mnews[nxt]))
+            nxt += 1
+        fleet.run()
+        done = fleet.results()
+        open_idx = np.flatnonzero(~np.isfinite(completion) & (rid_of >= 0))
+        for j in open_idx:
+            if int(rid_of[j]) in done:
+                completion[j] = (i + 1) * INTERVAL_S
+        i += 1
+        if nxt >= n and fleet.queue_depth == 0:
+            break
+
+    latency = completion - arr
+    slo = _slo(latency, cfg.slo_s)
+    outputs = fleet.results()
+    report = fleet.fleet_report(
+        slo_attainment=slo,
+        detail={"mode": "engine", "n_requests": n,
+                "mean_latency_s": float(
+                    latency[np.isfinite(latency)].mean())
+                if np.isfinite(latency).any() else float("inf")})
+    return ReplayResult(report=report, latency_s=latency,
+                        slo_attainment=slo,
+                        gco2_per_token=report.gco2_per_token(),
+                        dispatch_counts=fleet.dispatch_counts(),
+                        outputs=outputs)
+
+
+# ---------------------------------------------------------------------------
+# model mode
+# ---------------------------------------------------------------------------
+class _SimRegion:
+    """Calibrated FIFO server over a region's grid trace: same specs,
+    same scheduler, same meter booking as a RegionReplica, with decode
+    replaced by ``tokens / (tokens_per_s × derate scale)`` service
+    times."""
+
+    def __init__(self, spec: RegionSpec, *, scheduler_cfg: SchedulerConfig,
+                 pause_policy: str, base_max_batch: int):
+        self.spec = spec
+        self.supply = spec.supply_frac()
+        self.intensity = spec.intensity()
+        self.scheduler = CarbonAwareScheduler(scheduler_cfg)
+        self.forecast_quantiles = (
+            traces.quantile_forecast(self.supply)
+            if scheduler_cfg.use_forecast else None)
+        self.pause_policy = pause_policy
+        self.base_max_batch = base_max_batch
+        self.tokens_per_s = float(spec.tokens_per_s_hint)
+        self.meter = SustainabilityMeter.from_trace(
+            spec.trace, steps_per_interval=CURSOR_STRIDE,
+            name=f"fleet/{spec.name}")
+        self.queue: list[tuple[float, int, int]] = []  # (arrival, idx, toks)
+        self.clock = 0.0                               # server-busy-until time
+        self.tokens = 0
+
+    def _at(self, series, interval: int) -> float:
+        return float(series[min(interval, len(series) - 1)])
+
+    def snapshot(self, interval: int) -> RegionSnapshot:
+        return RegionSnapshot(
+            name=self.spec.name,
+            carbon_intensity=self._at(self.intensity, interval),
+            queue_depth=len(self.queue),
+            tokens_per_s=self.tokens_per_s,
+            headroom=self._at(self.supply, interval),
+        )
+
+    def rate(self, interval: int) -> float:
+        f = None
+        if self.forecast_quantiles is not None:
+            f = {float(q): self._at(v, interval)
+                 for q, v in self.forecast_quantiles.items()}
+        d = self.scheduler.decide(self._at(self.supply, interval), f)
+        if d.action is Action.PAUSE:
+            if self.pause_policy == "hold":
+                return 0.0
+            # serve_min: one decode lane's worth of the full-width rate
+            return self.tokens_per_s / max(self.base_max_batch, 1)
+        return self.tokens_per_s * d.step_scale
+
+    def drain(self, interval: int, completion: np.ndarray) -> None:
+        rate = self.rate(interval)
+        if rate <= 0.0 or not self.queue:
+            return
+        begin = interval * INTERVAL_S
+        end = begin + INTERVAL_S
+        t = max(self.clock, begin)       # server busy-until carries over
+        tokens = 0
+        busy = 0.0
+        while self.queue and t < end:
+            arr_s, idx, toks = self.queue[0]
+            start = max(t, arr_s)
+            if start >= end:
+                break
+            fin = start + toks / rate
+            # the head request at the interval's start is always served
+            # even if it spans the boundary (progress guarantee for
+            # requests longer than one derated interval); anything else
+            # that doesn't fit waits for next interval's rate
+            if fin > end and start > begin:
+                break
+            completion[idx] = fin
+            tokens += toks
+            busy += fin - start
+            t = fin
+            self.queue.pop(0)
+        self.clock = max(self.clock, t)
+        if tokens > 0:
+            self.meter.seek(interval * CURSOR_STRIDE)
+            self.meter.request(tokens, busy)
+            self.tokens += tokens
+
+
+def replay_model(regions: list[RegionSpec], cfg: ReplayConfig, *,
+                 policy: str = "carbon_latency", seed: int = 0,
+                 scheduler_cfg: SchedulerConfig | None = None,
+                 pause_policy: str = "serve_min",
+                 use_forecast: bool = False,
+                 base_max_batch: int = 8,
+                 router: Router | None = None) -> ReplayResult:
+    """Engine-free replay for six-figure request counts: identical
+    arrivals, routing and per-interval carbon booking, with decode
+    replaced by the calibrated service model."""
+    scfg = scheduler_cfg or SchedulerConfig(use_forecast=use_forecast)
+    sims = [_SimRegion(s, scheduler_cfg=scfg, pause_policy=pause_policy,
+                       base_max_batch=base_max_batch) for s in regions]
+    rtr = router or Router(policy, seed=seed)
+    n_int = min(len(s.supply) for s in sims)
+    arr = arrival_times(cfg, n_int)
+    _, mnews = request_shapes(cfg)
+    n = cfg.n_requests
+    completion = np.full(n, np.inf)
+    first = np.searchsorted(arr, np.arange(n_int) * INTERVAL_S)
+    counts = {s.spec.name: 0 for s in sims}
+    nxt = 0
+
+    i = 0
+    while i < n_int + MAX_DRAIN_EXTRA:
+        iv = min(i, n_int - 1)
+        end = first[i + 1] if i + 1 < n_int else n
+        while nxt < min(end, n):
+            snaps = [s.snapshot(iv) for s in sims]
+            ri = rtr.pick(snaps)
+            sims[ri].queue.append((float(arr[nxt]), nxt, int(mnews[nxt])))
+            counts[sims[ri].spec.name] += 1
+            nxt += 1
+        for s in sims:
+            s.drain(iv, completion)
+        i += 1
+        if nxt >= n and not any(s.queue for s in sims):
+            break
+
+    latency = completion - arr
+    slo = _slo(latency, cfg.slo_s)
+    tokens = sum(s.tokens for s in sims)
+    report = fleet_rollup(
+        {s.spec.name: s.meter.report() for s in sims},
+        policy=rtr.policy, requests=n, tokens=tokens,
+        slo_attainment=slo,
+        detail={"mode": "model", "n_requests": n,
+                "dispatch_counts": counts,
+                "mean_latency_s": float(latency[np.isfinite(latency)].mean())
+                if np.isfinite(latency).any() else float("inf")})
+    return ReplayResult(report=report, latency_s=latency,
+                        slo_attainment=slo,
+                        gco2_per_token=report.gco2_per_token(),
+                        dispatch_counts=counts)

@@ -1,0 +1,104 @@
+"""Carbon-aware request router for the multi-replica serving fleet.
+
+Dispatches each incoming request to one region replica
+(serve/fleet.py) from a per-interval snapshot of every region:
+
+  carbon_intensity   kg CO2 / kWh at the region's grid this interval
+                     (``GridTrace.carbon_intensity_kg_per_kwh``)
+  queue_depth        requests pending at the replica
+  tokens_per_s       measured decode rate (EWMA over served buckets)
+  headroom           renewable supply / data-center peak this interval
+
+Policies (``Router(policy=...)``):
+
+  round_robin     cycle regions regardless of state (the baseline the
+                  CI gate compares against)
+  least_loaded    argmin estimated latency = (queue_depth + 1) / tps
+  greenest        argmin carbon intensity — follow-the-renewables
+                  dispatch (Sustainable Cloud Computing, PAPERS.md)
+  carbon_latency  argmin of the weighted product
+
+      score(r) = (ci_r + eps)^w_c · ((q_r + 1) / tps_r)^w_l
+                                  / max(h_r, eps)^w_h
+
+                  carbon × estimated latency × supply-headroom
+                  discount; w_* default to 1 so the score is the plain
+                  product the docs/fleet.md formula states.
+
+Ties are broken by a PRNG seeded at construction — equal scores draw
+from ``np.random.default_rng(seed)``, so a fixed seed yields an
+identical dispatch trace (locked by tests/test_fleet.py), while a
+spread of seeds avoids thundering-herd pile-on when many routers see
+identical snapshots.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+POLICIES = ("round_robin", "least_loaded", "greenest", "carbon_latency")
+
+_EPS = 1e-9
+
+
+@dataclass(frozen=True)
+class RegionSnapshot:
+    """One region's router-visible state at a dispatch instant."""
+    name: str
+    carbon_intensity: float      # kg/kWh this interval
+    queue_depth: int             # requests pending at the replica
+    tokens_per_s: float          # measured decode rate (EWMA)
+    headroom: float              # supply_frac available this interval
+
+    @property
+    def est_latency_s(self) -> float:
+        """Queue-depth / throughput latency estimate: how long a new
+        request waits behind the queue at the measured rate.  The +1 is
+        the request being placed (an idle region still has finite
+        service time)."""
+        return (self.queue_depth + 1) / max(self.tokens_per_s, _EPS)
+
+
+class Router:
+    def __init__(self, policy: str = "carbon_latency", *, seed: int = 0,
+                 w_carbon: float = 1.0, w_latency: float = 1.0,
+                 w_headroom: float = 1.0):
+        if policy not in POLICIES:
+            raise ValueError(
+                f"unknown router policy {policy!r}; valid: {POLICIES}")
+        self.policy = policy
+        self.w_carbon = w_carbon
+        self.w_latency = w_latency
+        self.w_headroom = w_headroom
+        self.seed = seed
+        self._rng = np.random.default_rng(seed)
+        self._rr = 0
+
+    def score(self, snap: RegionSnapshot) -> float:
+        """Lower is better.  round_robin is stateful and has no score."""
+        if self.policy == "least_loaded":
+            return snap.est_latency_s
+        if self.policy == "greenest":
+            return snap.carbon_intensity
+        # carbon_latency: carbon × est latency / headroom, weighted
+        return ((snap.carbon_intensity + _EPS) ** self.w_carbon
+                * snap.est_latency_s ** self.w_latency
+                / max(snap.headroom, _EPS) ** self.w_headroom)
+
+    def pick(self, snaps: list[RegionSnapshot]) -> int:
+        """Index of the region to dispatch to."""
+        if not snaps:
+            raise ValueError("router.pick needs at least one region")
+        if self.policy == "round_robin":
+            i = self._rr % len(snaps)
+            self._rr += 1
+            return i
+        scores = np.asarray([self.score(s) for s in snaps], float)
+        best = scores.min()
+        # relative tolerance so float noise in a genuinely tied product
+        # doesn't silently pin everything to region 0
+        ties = np.flatnonzero(scores - best <= _EPS * max(abs(best), 1.0))
+        if len(ties) == 1:
+            return int(ties[0])
+        return int(ties[self._rng.integers(len(ties))])

@@ -1,0 +1,244 @@
+"""Fleet router / trace-replay behaviour.
+
+Locks the tentpole guarantees: routing moves carbon and latency but
+never numerics (fleet outputs bit-identical to solo serving), a fixed
+seed yields an identical dispatch trace, the ``ese-fleet-report/v1``
+schema round-trips and rejects drift, and on the skewed two-region
+fixture ``greenest`` dispatch books strictly less gCO2/token than
+``round_robin`` (the same inequality CI gates via bench_fleet).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_tiny
+from repro.core.ese.records import (
+    FLEET_REPORT_SCHEMA,
+    FleetReport,
+    validate_fleet_report_dict,
+)
+from repro.core.power.scheduler import (
+    Action,
+    CarbonAwareScheduler,
+    Decision,
+    SchedulerConfig,
+)
+from repro.models import model
+from repro.serve.engine import ServeEngine
+from repro.serve.fleet import RegionReplica, ServeFleet, skewed_region_pair
+from repro.serve.replay import (
+    ReplayConfig,
+    arrival_times,
+    replay_engine,
+    replay_model,
+    request_shapes,
+)
+from repro.serve.router import POLICIES, RegionSnapshot, Router
+
+ARCH = "llama3.2-3b"
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    mcfg = get_tiny(ARCH)
+    return mcfg, model.init_params(mcfg, jax.random.PRNGKey(0))
+
+
+def _snap(name, ci, q=0, tps=100.0, h=1.0):
+    return RegionSnapshot(name=name, carbon_intensity=ci, queue_depth=q,
+                          tokens_per_s=tps, headroom=h)
+
+
+# ---------------------------------------------------------------------------
+# router
+# ---------------------------------------------------------------------------
+def test_router_policies_pick_expected_region():
+    snaps = [_snap("a", 0.3), _snap("b", 0.1), _snap("c", 0.2)]
+    assert Router("greenest").pick(snaps) == 1
+    snaps = [_snap("a", 0.3, q=9), _snap("b", 0.3, q=2), _snap("c", 0.3, q=5)]
+    assert Router("least_loaded").pick(snaps) == 1
+    # carbon_latency trades both: cleaner region wins until its queue
+    # estimate outgrows the carbon gap
+    snaps = [_snap("clean", 0.1, q=0), _snap("dirty", 0.4, q=0)]
+    assert Router("carbon_latency").pick(snaps) == 0
+    snaps = [_snap("clean", 0.1, q=99), _snap("dirty", 0.4, q=0)]
+    assert Router("carbon_latency").pick(snaps) == 1
+    # headroom discounts the score
+    snaps = [_snap("a", 0.2, h=0.05), _snap("b", 0.2, h=1.0)]
+    assert Router("carbon_latency").pick(snaps) == 1
+
+
+def test_router_round_robin_cycles():
+    r = Router("round_robin")
+    snaps = [_snap(c, 0.1) for c in "abc"]
+    assert [r.pick(snaps) for _ in range(6)] == [0, 1, 2, 0, 1, 2]
+
+
+def test_router_rejects_unknown_policy_and_empty_snaps():
+    with pytest.raises(ValueError):
+        Router("random")
+    with pytest.raises(ValueError):
+        Router("greenest").pick([])
+
+
+def test_router_tie_break_deterministic_per_seed():
+    """Equal scores draw from the router's seeded PRNG: same seed →
+    identical pick sequence; the draw spreads across tied regions."""
+    snaps = [_snap(c, 0.2) for c in "abcd"]
+    r1, r2 = Router("greenest", seed=7), Router("greenest", seed=7)
+    seq1 = [r1.pick(snaps) for _ in range(64)]
+    seq2 = [r2.pick(snaps) for _ in range(64)]
+    assert seq1 == seq2
+    assert set(seq1) == {0, 1, 2, 3}
+
+
+# ---------------------------------------------------------------------------
+# arrivals
+# ---------------------------------------------------------------------------
+def test_arrival_times_deterministic_and_diurnal():
+    cfg = ReplayConfig(n_requests=20000, seed=5, diurnal_amp=0.8)
+    a1 = arrival_times(cfg, 288)
+    a2 = arrival_times(cfg, 288)
+    assert np.array_equal(a1, a2)
+    assert len(a1) == cfg.n_requests
+    assert (np.diff(a1) >= 0).all()
+    assert a1[0] >= 0.0 and a1[-1] <= 288 * 300.0
+    # evening peak (peak_hour=18) sees far more arrivals than dawn
+    hrs = (a1 / 3600.0) % 24
+    peak = ((hrs >= 16) & (hrs < 20)).sum()
+    trough = ((hrs >= 4) & (hrs < 8)).sum()
+    assert peak > 1.5 * trough
+    # shapes come from their own stream and are deterministic too
+    assert all(np.array_equal(x, y)
+               for x, y in zip(request_shapes(cfg), request_shapes(cfg)))
+
+
+def test_replay_config_validation():
+    with pytest.raises(ValueError):
+        ReplayConfig(n_requests=0)
+    with pytest.raises(ValueError):
+        ReplayConfig(diurnal_amp=1.0)
+
+
+# ---------------------------------------------------------------------------
+# model-mode replay
+# ---------------------------------------------------------------------------
+def test_model_mode_greenest_beats_round_robin():
+    """The CI-gated inequality: on the skewed two-region fixture,
+    carbon-aware dispatch books strictly less operational gCO2/token
+    than blind round-robin."""
+    regions = skewed_region_pair(days=1, seed=0)
+    cfg = ReplayConfig(n_requests=4000, seed=1)
+    g = replay_model(regions, cfg, policy="greenest")
+    rr = replay_model(regions, cfg, policy="round_robin")
+    assert g.gco2_per_token < rr.gco2_per_token
+    assert sum(g.dispatch_counts.values()) == cfg.n_requests
+    assert g.slo_attainment > 0.0
+    # every request completes (serve_min never starves a region)
+    assert np.isfinite(g.latency_s).all()
+    assert np.isfinite(rr.latency_s).all()
+
+
+def test_model_mode_policies_all_run_and_report():
+    regions = skewed_region_pair(days=1, seed=0)
+    cfg = ReplayConfig(n_requests=500, seed=2)
+    for policy in POLICIES:
+        res = replay_model(regions, cfg, policy=policy)
+        d = res.report.to_json_dict()
+        validate_fleet_report_dict(d)
+        assert d["policy"] == policy
+        assert d["requests"] == cfg.n_requests
+
+
+def test_fleet_report_schema_roundtrip_and_tamper():
+    regions = skewed_region_pair(days=1, seed=0)
+    res = replay_model(regions, ReplayConfig(n_requests=300, seed=4),
+                       policy="carbon_latency")
+    d = res.report.to_json_dict()
+    assert d["schema"] == FLEET_REPORT_SCHEMA
+    rt = FleetReport.from_json_dict(d)
+    assert rt.to_json_dict() == d
+    # drift is rejected with the offending key named
+    bad = dict(d)
+    bad.pop("regions")
+    with pytest.raises(ValueError, match="regions"):
+        validate_fleet_report_dict(bad)
+    bad = dict(d)
+    bad["schema"] = "ese-fleet-report/v0"
+    with pytest.raises(ValueError, match="schema"):
+        validate_fleet_report_dict(bad)
+    bad = {**d, "totals": {**d["totals"]}}
+    bad["totals"].pop("gco2_per_token")
+    with pytest.raises(ValueError, match="gco2_per_token"):
+        validate_fleet_report_dict(bad)
+
+
+# ---------------------------------------------------------------------------
+# scheduler-derated bucket width
+# ---------------------------------------------------------------------------
+def test_region_replica_derated_width(tiny):
+    mcfg, params = tiny
+    spec = skewed_region_pair(days=1, seed=0)[1]     # dirty region
+    rep = RegionReplica(
+        spec, mcfg, params, max_batch=8,
+        scheduler=CarbonAwareScheduler(SchedulerConfig(use_forecast=False)))
+    assert rep.effective_max_batch(Decision(Action.RUN, 1.0, 16)) == 8
+    assert rep.effective_max_batch(Decision(Action.DERATE, 0.5, 6)) == 4
+    # PAUSE can't stop serving: serve_min keeps one decode lane
+    assert rep.effective_max_batch(Decision(Action.PAUSE, 0.0, 4)) == 1
+    hold = RegionReplica(spec, mcfg, params, max_batch=8,
+                         pause_policy="hold")
+    assert hold.effective_max_batch(Decision(Action.PAUSE, 0.0, 4)) == 0
+    with pytest.raises(ValueError):
+        RegionReplica(spec, mcfg, params, pause_policy="nope")
+
+
+# ---------------------------------------------------------------------------
+# engine-mode replay: numerics and determinism
+# ---------------------------------------------------------------------------
+def test_fleet_outputs_bit_identical_to_solo(tiny):
+    """Routing moves carbon/latency, never numerics: every request
+    served by the fleet matches a solo max_batch=1 engine bit-for-bit,
+    whichever region it landed on."""
+    mcfg, params = tiny
+    regions = skewed_region_pair(days=1, seed=0)
+    fl = ServeFleet(mcfg, params, regions, policy="carbon_latency",
+                    seed=0, max_batch=2, paged=True, page_size=4)
+    cfg = ReplayConfig(n_requests=6, seed=3, prompt_len=(3, 6),
+                       max_new=(3, 5))
+    res = replay_engine(fl, cfg)
+    assert len(res.outputs) == cfg.n_requests
+    assert res.slo_attainment == 1.0
+
+    plens, mnews = request_shapes(cfg)
+    rng = np.random.default_rng(cfg.seed + 2)     # replay's prompt stream
+    prompts = [rng.integers(1, mcfg.vocab_size, plens[i]).astype(np.int32)
+               for i in range(cfg.n_requests)]
+    solo = ServeEngine(mcfg, params, max_batch=1, paged=True, page_size=4)
+    rids = [solo.submit(p, max_new_tokens=int(m))
+            for p, m in zip(prompts, mnews)]
+    sres = solo.run()
+    for i in range(cfg.n_requests):
+        assert res.outputs[i] == sres[rids[i]]
+
+    d = res.report.to_json_dict()
+    validate_fleet_report_dict(d)
+    assert d["requests"] == cfg.n_requests
+    assert d["tokens"] > 0
+    assert d["detail"]["mode"] == "engine"
+
+
+def test_fleet_dispatch_trace_deterministic(tiny):
+    """Fixed seed → identical dispatch trace across fresh fleets."""
+    mcfg, params = tiny
+    cfg = ReplayConfig(n_requests=8, seed=11, prompt_len=(3, 4),
+                       max_new=(3, 4))
+    tr = []
+    for _ in range(2):
+        fl = ServeFleet(mcfg, params, skewed_region_pair(days=1, seed=0),
+                        policy="greenest", seed=9, max_batch=2,
+                        paged=True, page_size=4)
+        replay_engine(fl, cfg)
+        tr.append(list(fl.dispatch_trace))
+    assert tr[0] == tr[1]
+    assert len(tr[0]) == cfg.n_requests

@@ -32,6 +32,112 @@ def test_scheduler_forecast_conservative():
     assert sch.decide(0.9, forecast_frac=0.1).action == Action.PAUSE
 
 
+def test_scheduler_config_rejects_degenerate_band():
+    """Regression: threshold == full_power used to reach decide() and
+    divide by zero; an inverted pair produced step scales outside
+    [derate_step_scale, 1]."""
+    with pytest.raises(ValueError):
+        SchedulerConfig(threshold_frac=0.7, full_power_frac=0.7)
+    with pytest.raises(ValueError):
+        SchedulerConfig(threshold_frac=0.9, full_power_frac=0.7)
+    with pytest.raises(ValueError):
+        SchedulerConfig(derate_step_scale=0.0)
+    with pytest.raises(ValueError):
+        SchedulerConfig(derate_step_scale=1.5)
+    with pytest.raises(ValueError):
+        SchedulerConfig(forecast_quantile=1.5)
+
+
+def test_scheduler_scale_lawful_in_narrow_band():
+    """Regression: a barely-legal narrow derate band used to overshoot
+    step_scale past 1.0 for supply just under full power."""
+    sch = CarbonAwareScheduler(SchedulerConfig(
+        threshold_frac=0.6999, full_power_frac=0.70, use_forecast=False))
+    for s in np.linspace(0.0, 1.0, 101):
+        d = sch.decide(float(s))
+        assert 0.0 <= d.step_scale <= 1.0
+        if d.action is Action.DERATE:
+            assert d.step_scale >= sch.cfg.derate_step_scale - 1e-12
+
+
+def test_scheduler_forecast_quantile_changes_decisions():
+    """forecast_quantile used to be dead config: same quantile band,
+    different configured quantile, different decision."""
+    band = {0.25: 0.1, 0.5: 0.5, 0.75: 0.9}
+    lo = CarbonAwareScheduler(
+        SchedulerConfig(forecast_quantile=0.25)).decide(0.95, band)
+    hi = CarbonAwareScheduler(
+        SchedulerConfig(forecast_quantile=0.75)).decide(0.95, band)
+    assert lo.action is Action.PAUSE
+    assert hi.action is Action.RUN
+    # nearest quantile wins; exact-distance ties go conservative (lower)
+    mid = CarbonAwareScheduler(
+        SchedulerConfig(forecast_quantile=0.375)).decide(
+            0.95, {0.25: 0.1, 0.5: 0.9})
+    assert mid.action is Action.PAUSE
+    with pytest.raises(ValueError):
+        CarbonAwareScheduler(SchedulerConfig()).decide(0.9, {})
+
+
+def test_schedule_accepts_quantile_series():
+    sup = np.array([0.9, 0.9, 0.9])
+    fc = {0.25: np.array([0.9, 0.1, 0.5]),
+          0.75: np.array([0.9, 0.9, 0.9])}
+    sch = CarbonAwareScheduler(SchedulerConfig(forecast_quantile=0.25))
+    acts = [d.action for d in sch.schedule(sup, fc)]
+    assert acts == [Action.RUN, Action.PAUSE, Action.DERATE]
+
+
+def test_quantile_forecast_band_shape():
+    tr = traces.make_trace(days=1, seed=2)
+    sup = traces.datacenter_supply(tr) / 30.0
+    band = traces.quantile_forecast(sup, horizon=3)
+    assert set(band) == {0.25, 0.5, 0.75}
+    for q, v in band.items():
+        assert v.shape == sup.shape
+    # quantiles are ordered pointwise
+    assert (band[0.25] <= band[0.5] + 1e-12).all()
+    assert (band[0.5] <= band[0.75] + 1e-12).all()
+
+
+def test_grid_intensity_edge_cases():
+    # all-surplus renewables -> exactly carbon-free, not merely small
+    surplus = traces.GridTrace(solar=np.full(8, 5000.0),
+                               wind=np.full(8, 5000.0),
+                               demand=np.full(8, 3000.0))
+    assert (surplus.carbon_intensity_kg_per_kwh == 0.0).all()
+    # zero demand: finite (no div-by-zero), and carbon-free
+    dead = traces.GridTrace(solar=np.zeros(4), wind=np.zeros(4),
+                            demand=np.zeros(4))
+    ci = dead.carbon_intensity_kg_per_kwh
+    assert np.isfinite(ci).all() and (ci == 0.0).all()
+    # never exceeds the fossil marginal intensity
+    tr = traces.make_trace(days=2, seed=3)
+    ci = tr.carbon_intensity_kg_per_kwh
+    assert (ci >= 0.0).all()
+    assert (ci <= traces.FOSSIL_KG_PER_KWH + 1e-12).all()
+
+
+def test_explorer_powered_matches_scheduler_cutoff():
+    """Regression: explorer's energy accounting hardcoded a 0.25
+    powered threshold; it must agree with the scheduler's PAUSE cutoff
+    for any configured threshold."""
+    tr = traces.make_trace(days=2, seed=1)
+    sup = traces.datacenter_supply(tr) / 30.0
+    scfg = SchedulerConfig(use_forecast=False, threshold_frac=0.4)
+    row = explorer.fleet_carbon(explorer.PROFILES[0], sup,
+                                scheduler_cfg=scfg)
+    sch = CarbonAwareScheduler(scfg)
+    expect = sum(d.action is not Action.PAUSE for d in sch.schedule(sup))
+    assert row["powered_intervals"] == expect
+    # raising the pause threshold can only shrink the powered set
+    hi = explorer.fleet_carbon(
+        explorer.PROFILES[0], sup,
+        scheduler_cfg=SchedulerConfig(use_forecast=False,
+                                      threshold_frac=0.6))
+    assert hi["powered_intervals"] <= row["powered_intervals"]
+
+
 def test_forward_progress_ordering_fig5r():
     """Fig 5 right: fully-nonvolatile > partial-NV > volatile."""
     tr = traces.make_trace(days=7, seed=0)
