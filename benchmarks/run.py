@@ -13,6 +13,8 @@ Prints ``name,value,derived`` CSV rows.  Mapping to the paper:
                          resident while_loop vs seed per-token sync)
   bench_fleet            multi-region fleet replay: router-policy
                          SLO-vs-gCO2/token Pareto + schema/identity gates
+  bench_reconfig         §II-A AMOEBA reconfiguration: per-interval
+                         config selection vs binary RUN/DERATE/PAUSE
 
 Usage:
   python benchmarks/run.py [--sections frac,kernels] [--json [DIR]]
@@ -48,6 +50,7 @@ def main(argv: list[str] | None = None) -> None:
         bench_frac_capacity,
         bench_kernels,
         bench_progress_carbon,
+        bench_reconfig,
         bench_roofline,
         bench_serve,
     )
@@ -62,6 +65,7 @@ def main(argv: list[str] | None = None) -> None:
         ("ese_estimates", bench_ese_estimates),
         ("serve", bench_serve),
         ("fleet", bench_fleet),
+        ("reconfig", bench_reconfig),
     ]
     if args.sections:
         wanted = {s.strip() for s in args.sections.split(",") if s.strip()}

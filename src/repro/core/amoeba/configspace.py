@@ -1,0 +1,295 @@
+"""AMOEBA hardware-configuration space + calibratable cost model.
+
+The paper's reconfigurable accelerator re-maps one substrate across
+intensive computing primitives; GreenFPGA's argument (PAPERS.md) is
+that reconfigurability *amortizes embodied carbon* — the same silicon
+does useful work in more grid conditions.  This module makes that
+space typed and searchable:
+
+  ``HwConfig``     one point in the reconfiguration space: kernel
+                   variant, FRAC grad-compress width, FRAC KV width,
+                   serve bucket-width fraction, step-rate scale, and an
+                   optional schedulable fill primitive (the seed
+                   NTT/SHA3 kernels as workloads in their own right);
+  ``CostModel``    modeled (power_frac, utility) per config — a small
+                   parametric power decomposition with a measurement
+                   override table, so live runs can calibrate it;
+  ``ConfigSpace``  an ordered, validated set of HwConfigs, with the
+                   default ladders the ReconfigController searches
+                   (core/amoeba/runtime.py).
+
+Power model (fractions of the full-rate facility draw):
+
+  power(cfg) = idle + busy·[ width·(compute + wire·g(k_grad)
+                                    + mem·g(k_kv))·rate
+                             + fill_power·1[fill] ]
+
+with ``width = bucket_frac``, ``rate = step_scale`` and
+``g(k) = k/16`` the FRAC wire/memory scaling — compression moves fewer
+bits, so the wire/memory share of the draw scales with the dial while
+the compute share does not.  Utility (useful progress per interval at
+full rate = 1.0) charges a small quality loss per compression step
+(error feedback keeps contraction, but noisier gradients are worth
+slightly less progress) and credits fill primitives at a modest flat
+rate.  Both maps accept measured overrides via ``calibrate``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Mapping
+
+from repro.core.amoeba.engines import WORKLOAD_ENGINES
+
+KERNEL_VARIANTS = ("dense", "paged")     # serve-engine substrate mapping
+FRAC_LADDER = (16, 11, 8, 6, 4)          # grad-compress / KV width rungs
+
+
+@dataclass(frozen=True)
+class HwConfig:
+    """One point in the AMOEBA reconfiguration space.
+
+    ``step_scale`` and ``bucket_frac`` are the *rate* and *width* dials
+    (train step rate, serve bucket width); ``grad_kbits`` / ``kv_kbits``
+    are the FRAC compression dials (16 = off); ``fill`` names a
+    schedulable intensive-computing primitive (``engines.dispatch``
+    workload) the substrate runs when the budget can't fit model work.
+    """
+    name: str
+    kernel: str = "dense"
+    step_scale: float = 1.0
+    grad_kbits: int = 16
+    kv_kbits: int = 16
+    bucket_frac: float = 1.0
+    fill: str | None = None
+    fill_duty: float = 1.0     # fraction of the interval the fill runs
+
+    def __post_init__(self):
+        if self.kernel not in KERNEL_VARIANTS:
+            raise ValueError(
+                f"HwConfig {self.name!r}: kernel must be one of "
+                f"{KERNEL_VARIANTS}, got {self.kernel!r}")
+        if not 0.0 <= self.step_scale <= 1.0:
+            raise ValueError(
+                f"HwConfig {self.name!r}: step_scale must be in [0, 1], "
+                f"got {self.step_scale}")
+        if not 0.0 <= self.bucket_frac <= 1.0:
+            raise ValueError(
+                f"HwConfig {self.name!r}: bucket_frac must be in [0, 1], "
+                f"got {self.bucket_frac}")
+        if not 0.0 < self.fill_duty <= 1.0:
+            raise ValueError(
+                f"HwConfig {self.name!r}: fill_duty must be in (0, 1], "
+                f"got {self.fill_duty}")
+        for key in ("grad_kbits", "kv_kbits"):
+            k = getattr(self, key)
+            if not 1 <= int(k) <= 16:
+                raise ValueError(
+                    f"HwConfig {self.name!r}: {key} must be in 1..16, "
+                    f"got {k}")
+        if self.fill is not None and self.fill not in WORKLOAD_ENGINES:
+            raise ValueError(
+                f"HwConfig {self.name!r}: fill must be one of "
+                f"{sorted(WORKLOAD_ENGINES)} or None, got {self.fill!r}")
+
+    @property
+    def is_idle(self) -> bool:
+        """No model work and no fill primitive: the substrate gates off."""
+        return self.step_scale == 0.0 and self.bucket_frac == 0.0 \
+            and self.fill is None
+
+
+@dataclass
+class CostModel:
+    """Modeled power/utility per HwConfig, with measured overrides.
+
+    The shares (``compute + wire + mem == 1``) decompose the busy draw;
+    ``quality_loss_per_rung`` prices each FRAC ladder step below 16
+    bits; ``fill_power``/``fill_utility`` price a fill primitive
+    running on the otherwise-idle substrate.  ``calibrate`` installs
+    measured (power_frac, utility) pairs per config name that take
+    precedence over the model — live runs feed their metered draw and
+    throughput back in.
+    """
+    idle_frac: float = 0.04
+    compute_share: float = 0.55
+    wire_share: float = 0.27
+    mem_share: float = 0.18
+    quality_loss_per_rung: float = 0.02
+    fill_power: float = 0.16
+    fill_utility: float = 0.30
+    measured: dict[str, tuple[float, float]] = field(default_factory=dict)
+
+    def __post_init__(self):
+        shares = self.compute_share + self.wire_share + self.mem_share
+        if abs(shares - 1.0) > 1e-6:
+            raise ValueError(
+                "CostModel: compute_share + wire_share + mem_share must "
+                f"sum to 1, got {shares}")
+        if not 0.0 <= self.idle_frac < 1.0:
+            raise ValueError(
+                f"CostModel: idle_frac must be in [0, 1), got "
+                f"{self.idle_frac}")
+        if not 0.0 <= self.quality_loss_per_rung < 0.25:
+            raise ValueError(
+                "CostModel: quality_loss_per_rung must be in [0, 0.25), "
+                f"got {self.quality_loss_per_rung}")
+
+    # -- calibration ---------------------------------------------------------
+    def calibrate(self, measurements: Mapping[str, tuple[float, float]]
+                  ) -> None:
+        """Install measured ``{config_name: (power_frac, utility)}``
+        overrides (e.g. metered draw / measured tokens-per-s relative
+        to the full config).  Measured values beat the model in
+        ``power_frac``/``utility`` from then on."""
+        for name, (p, u) in measurements.items():
+            p, u = float(p), float(u)
+            if not 0.0 <= p <= 1.5:
+                raise ValueError(
+                    f"CostModel.calibrate: power_frac for {name!r} must "
+                    f"be in [0, 1.5], got {p}")
+            if u < 0.0:
+                raise ValueError(
+                    f"CostModel.calibrate: utility for {name!r} must be "
+                    f">= 0, got {u}")
+            self.measured[name] = (p, u)
+
+    # -- model ---------------------------------------------------------------
+    def _rungs_below_full(self, kbits: int) -> int:
+        """How many FRAC ladder rungs below 16 the dial sits at (a dial
+        between rungs counts the rungs it passed)."""
+        return sum(1 for r in FRAC_LADDER if r > kbits)
+
+    def power_frac(self, cfg: HwConfig) -> float:
+        """Fraction of the full-rate facility draw this config pulls."""
+        if cfg.name in self.measured:
+            return self.measured[cfg.name][0]
+        if cfg.is_idle:
+            return 0.0
+        busy = (self.compute_share
+                + self.wire_share * cfg.grad_kbits / 16.0
+                + self.mem_share * cfg.kv_kbits / 16.0)
+        model_draw = cfg.step_scale * cfg.bucket_frac * busy
+        # a duty-cycled fill draws (and produces) proportionally less:
+        # the substrate harvests power scraps too small for a full
+        # primitive interval (the dirty-grid regime of the skewed
+        # benchmark fixture).  Fill-ONLY configs power-gate outside the
+        # duty window, so the idle floor scales with duty as well.
+        fill_draw = (self.fill_power * cfg.fill_duty
+                     if cfg.fill is not None else 0.0)
+        if cfg.fill is not None and model_draw == 0.0:
+            return cfg.fill_duty * (
+                self.idle_frac
+                + (1.0 - self.idle_frac) * self.fill_power)
+        return self.idle_frac + (1.0 - self.idle_frac) * (
+            model_draw + fill_draw)
+
+    def utility(self, cfg: HwConfig) -> float:
+        """Useful progress per interval, full config = 1.0."""
+        if cfg.name in self.measured:
+            return self.measured[cfg.name][1]
+        quality = 1.0 \
+            - self.quality_loss_per_rung * self._rungs_below_full(
+                cfg.grad_kbits) \
+            - self.quality_loss_per_rung * self._rungs_below_full(
+                cfg.kv_kbits)
+        model_u = cfg.step_scale * cfg.bucket_frac * max(quality, 0.0)
+        fill_u = (self.fill_utility * cfg.fill_duty
+                  if cfg.fill is not None else 0.0)
+        return model_u + fill_u
+
+
+class ConfigSpace:
+    """Ordered, name-unique set of HwConfigs the controller searches."""
+
+    def __init__(self, configs: Iterable[HwConfig]):
+        self.configs: tuple[HwConfig, ...] = tuple(configs)
+        if not self.configs:
+            raise ValueError("ConfigSpace needs at least one HwConfig")
+        names = [c.name for c in self.configs]
+        dupes = {n for n in names if names.count(n) > 1}
+        if dupes:
+            raise ValueError(
+                f"ConfigSpace: duplicate config names {sorted(dupes)}")
+        self.by_name: dict[str, HwConfig] = {c.name: c for c in self.configs}
+
+    def __iter__(self):
+        return iter(self.configs)
+
+    def __len__(self) -> int:
+        return len(self.configs)
+
+    def __getitem__(self, name: str) -> HwConfig:
+        if name not in self.by_name:
+            raise ValueError(
+                f"unknown HwConfig {name!r}; valid: "
+                f"{sorted(self.by_name)}")
+        return self.by_name[name]
+
+    def min_grad_kbits(self) -> int:
+        return min(c.grad_kbits for c in self.configs)
+
+    @property
+    def idle(self) -> HwConfig:
+        """The zero-power fallback (synthesized if the space lacks one)."""
+        for c in self.configs:
+            if c.is_idle:
+                return c
+        return HwConfig("idle", step_scale=0.0, bucket_frac=0.0)
+
+
+FILL_DUTIES = (1.0, 0.25, 0.0625)        # fill duty-cycle rungs
+
+
+def _fill_rungs(fill: str, duties: tuple[float, ...] = FILL_DUTIES,
+                **kw) -> list[HwConfig]:
+    """Fill-only configs at each duty rung: ``fill_ntt`` (full duty),
+    ``fill_ntt_d0p25`` … — the low rungs harvest budgets far below one
+    full primitive interval."""
+    out = []
+    for d in duties:
+        tag = (f"fill_{fill}" if d == 1.0
+               else f"fill_{fill}_d{d:g}".replace(".", "p"))
+        out.append(HwConfig(tag, step_scale=0.0, bucket_frac=0.0,
+                            fill=fill, fill_duty=d, **kw))
+    return out
+
+
+def train_space(*, fill: str | None = "ntt",
+                step_scales: tuple[float, ...] = (1.0, 0.75, 0.5, 0.25),
+                ladder: tuple[int, ...] = FRAC_LADDER) -> ConfigSpace:
+    """The training lattice: step-rate rungs × FRAC grad-compress
+    rungs — a config for every budget level, so derating steps *down
+    the compression ladder first* (better utility per joule than rate
+    scaling) and only then slows the step rate.  Plus fill-only rungs
+    (the substrate runs an intensive primitive, possibly duty-cycled,
+    when model work doesn't fit) and idle.  Serving dials stay at their
+    defaults (bucket_frac=1 is a no-op for the train loop)."""
+    cfgs = [HwConfig("full", step_scale=1.0, grad_kbits=16)]
+    for s in step_scales:
+        for k in ladder:
+            if s == 1.0 and k == 16:
+                continue                      # that's "full"
+            tag = f"rate{s:g}_k{k}".replace(".", "p")
+            cfgs.append(HwConfig(tag, step_scale=s, grad_kbits=k))
+    if fill is not None:
+        cfgs.extend(_fill_rungs(fill))
+    cfgs.append(HwConfig("idle", step_scale=0.0, bucket_frac=0.0))
+    return ConfigSpace(cfgs)
+
+
+def serve_space(*, kv_kbits: int = 16, kernel: str = "paged",
+                fill: str | None = "sha3") -> ConfigSpace:
+    """The serving ladder: bucket-width fractions at a *fixed* KV width
+    (a live replica must not change KV numerics mid-run — width never
+    changes tokens, the KV dial does), then fill-only duty rungs, then
+    idle."""
+    cfgs = []
+    for frac in (1.0, 0.75, 0.5, 0.25, 0.125):
+        tag = f"bucket_{frac:g}".replace(".", "p")
+        cfgs.append(HwConfig(tag, kernel=kernel, bucket_frac=frac,
+                             kv_kbits=kv_kbits))
+    if fill is not None:
+        cfgs.extend(_fill_rungs(fill, kernel=kernel, kv_kbits=kv_kbits))
+    cfgs.append(HwConfig("idle", kernel=kernel, step_scale=0.0,
+                         bucket_frac=0.0, kv_kbits=kv_kbits))
+    return ConfigSpace(cfgs)

@@ -127,5 +127,7 @@ WORKLOAD_ENGINES = {
 
 def dispatch(workload: str) -> tuple[Engine, ...]:
     if workload not in WORKLOAD_ENGINES:
-        raise KeyError(f"unknown workload {workload!r}")
+        raise ValueError(
+            f"unknown workload {workload!r}; valid: "
+            + " | ".join(sorted(WORKLOAD_ENGINES)))
     return WORKLOAD_ENGINES[workload]

@@ -43,3 +43,28 @@ def counter_corrected_bits(key: jax.Array, n_segments: int,
 
 def bias(bits: jax.Array) -> float:
     return float(jnp.mean(bits.astype(jnp.float32)))
+
+
+def uniforms(key: jax.Array, n: int, *, nbits: int = 16,
+             corrected: bool = True, p0: float = 0.62,
+             gain: float = 0.9) -> jax.Array:
+    """Assemble ``n`` uniforms in [0, 1) from the TRG bit stream —
+    ``nbits`` consecutive stream bits per value, MSB first.  This is
+    the bridge the module docstring promises: the FRAC quantizer's
+    stochastic rounding (core/frac/codec.py, ``rng_source="trg"``)
+    draws its bump probabilities from the bias-corrected device stream
+    instead of ``jax.random.uniform``.  ``corrected=False`` exposes the
+    raw '0'-biased device — useful only to demonstrate what the
+    counter feedback buys (a biased source shifts every rounding
+    decision the same way; see tests/test_reconfig.py)."""
+    if n < 1 or not 1 <= nbits <= 24:
+        raise ValueError(
+            f"trg.uniforms: need n >= 1 and 1 <= nbits <= 24, "
+            f"got n={n} nbits={nbits}")
+    total = n * nbits
+    n_segments = -(-total // SEGMENT_BITS)
+    bits = (counter_corrected_bits(key, n_segments, p0=p0, gain=gain)
+            if corrected else biased_bits(key, n_segments, p0=p0))
+    b = bits.reshape(-1)[:total].reshape(n, nbits).astype(jnp.float32)
+    weights = 2.0 ** -jnp.arange(1, nbits + 1, dtype=jnp.float32)
+    return b @ weights

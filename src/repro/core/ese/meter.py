@@ -23,7 +23,7 @@ serializable to the stable ese-energy-report/v1 JSON schema.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -62,6 +62,14 @@ class _Totals:
     flash_writes: int = 0        # flash pages programmed
     flash_erases: int = 0        # block erases
     flash_op_j: float = 0.0      # read/program/erase energy booked
+    # AMOEBA reconfiguration attribution (core/amoeba/runtime.py)
+    reconfig_steps: int = 0      # intervals booked under a chosen HwConfig
+    reconfig_decisions: dict = field(default_factory=dict)  # config -> count
+    avoided_reconfig_j: float = 0.0
+    avoided_reconfig_co2_kg: float = 0.0
+    fill_jobs: int = 0           # fill primitives actually executed
+    fill_j: float = 0.0          # fill operational energy (incl. modeled)
+    fill_work_units: float = 0.0
 
 
 class SustainabilityMeter:
@@ -146,21 +154,37 @@ class SustainabilityMeter:
 
         ``decision`` is the interval's CarbonAwareScheduler Decision (if
         any): a derated step draws ``step_scale`` of full power and the
-        remainder is attributed to the scheduler as avoided energy.
+        remainder is attributed to the scheduler as avoided energy.  A
+        ReconfigDecision (core/amoeba/runtime.py) instead draws its
+        chosen config's modeled ``power_frac``, and the remainder is
+        attributed to the reconfiguration runtime per config
+        (``detail["reconfig"]``).
         """
-        scale = 1.0 if decision is None else max(float(decision.step_scale),
-                                                 0.0)
+        reconfig = decision is not None and hasattr(decision, "config")
+        if decision is None:
+            scale = 1.0
+        elif reconfig:
+            scale = max(float(decision.power_frac), 0.0)
+        else:
+            scale = max(float(decision.step_scale), 0.0)
         intensity = self.carbon_intensity()
         op_j = self.facility_w * scale * dt_s
         emb_before = self.footprint.embodied_j
         self.footprint.charge(embodied.tpu_chip(self.cfg.recycled_optin),
                               dt_s * self.cfg.chips, op_j)
         emb_j = self.footprint.embodied_j - emb_before
+        if reconfig:
+            self.book_reconfig(decision)
         if scale < 1.0:
             avoided = self.facility_w * (1.0 - scale) * dt_s
-            self.totals.avoided_derate_j += avoided
-            self.totals.avoided_co2_kg += avoided / 3.6e6 * intensity
-            self.totals.derated_steps += 1
+            if reconfig:
+                self.totals.avoided_reconfig_j += avoided
+                self.totals.avoided_reconfig_co2_kg += \
+                    avoided / 3.6e6 * intensity
+            else:
+                self.totals.avoided_derate_j += avoided
+                self.totals.avoided_co2_kg += avoided / 3.6e6 * intensity
+                self.totals.derated_steps += 1
         co2_op = op_j / 3.6e6 * intensity
         self.totals.co2_operational_kg += co2_op
         self.totals.steps += 1
@@ -178,33 +202,84 @@ class SustainabilityMeter:
                 self.totals.avoided_pause_j += avoided
                 self.totals.avoided_co2_kg += avoided / 3.6e6 * ci_p
             self._pending_pauses.clear()
+        extra = {"step_scale": scale,
+                 "decision": getattr(getattr(decision, "action", None),
+                                     "value", "run")}
+        if reconfig:
+            extra["hw_config"] = decision.config.name
         return self._reading(
             f"{self.name}/step{self.totals.steps - 1}", 1, dt_s, op_j, emb_j,
-            co2_op, intensity,
-            extra={"step_scale": scale,
-                   "decision": getattr(getattr(decision, "action", None),
-                                       "value", "run")},
+            co2_op, intensity, extra=extra,
         )
 
-    def pause(self, duration_s: float | None = None) -> None:
+    def book_reconfig(self, decision) -> None:
+        """Count one booked interval under a chosen HwConfig.  step/
+        pause call this for train-style intervals; the serving fleet
+        (serve/fleet.py) calls it directly per drained interval, since
+        serving books energy per request, not per interval."""
+        name = decision.config.name
+        self.totals.reconfig_steps += 1
+        self.totals.reconfig_decisions[name] = \
+            self.totals.reconfig_decisions.get(name, 0) + 1
+
+    def pause(self, duration_s: float | None = None, *,
+              decision=None) -> None:
         """Book one scheduler-paused interval: no work, no operational
         draw; the full-rate energy that did NOT happen is attributed to
         the carbon-aware scheduler.  Before any step has been measured
         the duration falls back to ``step_s_hint`` / the roofline bound;
         with neither configured (a run that starts in a low-supply
         window), the pause is held back and booked retroactively at the
-        first measured step time."""
+        first measured step time.
+
+        A ReconfigDecision ``decision`` attributes the avoided energy
+        to the reconfiguration runtime instead (netting out the chosen
+        config's own draw — a fill-only config is not fully idle; its
+        fill energy is booked separately via ``fill``)."""
         dt = duration_s if duration_s is not None else self._step_s_default()
         intensity = self.carbon_intensity()
+        reconfig = decision is not None and hasattr(decision, "config")
         self.totals.paused_steps += 1
         self.totals.steps += 1          # simulated time advances the interval
         self._interval_step += 1
+        if reconfig:
+            self.book_reconfig(decision)
         if dt <= 0.0:
-            self._pending_pauses.append(intensity)
+            if not reconfig:
+                self._pending_pauses.append(intensity)
+            return
+        if reconfig:
+            scale = max(float(decision.power_frac), 0.0)
+            avoided = self.facility_w * max(1.0 - scale, 0.0) * dt
+            self.totals.avoided_reconfig_j += avoided
+            self.totals.avoided_reconfig_co2_kg += \
+                avoided / 3.6e6 * intensity
             return
         avoided = self.facility_w * dt
         self.totals.avoided_pause_j += avoided
         self.totals.avoided_co2_kg += avoided / 3.6e6 * intensity
+
+    def fill(self, dt_s: float, *, workload: str, power_frac: float,
+             work_units: float = 0.0, executed: bool = True) -> None:
+        """Book fill-primitive work the reconfiguration runtime
+        dispatched into a low-power interval (core/amoeba/runtime.py):
+        operational energy at the fill config's modeled draw, chip
+        occupancy, and carbon at the interval's intensity.  ``executed``
+        distinguishes really-run ``PrimitiveJob``s (counted under
+        ``fill.jobs``) from modeled fill intervals in trace replays.
+        The grid-interval cursor is NOT advanced: fill overlaps the
+        paused interval already booked."""
+        intensity = self.carbon_intensity()
+        op_j = self.facility_w * max(float(power_frac), 0.0) * dt_s
+        self.footprint.charge(embodied.tpu_chip(self.cfg.recycled_optin),
+                              dt_s * self.cfg.chips, op_j)
+        self.totals.co2_operational_kg += op_j / 3.6e6 * intensity
+        self.totals.wall_s += dt_s
+        if executed:
+            self.totals.fill_jobs += 1
+        self.totals.fill_j += op_j
+        self.totals.fill_work_units += float(work_units)
+        del workload  # per-workload split lives in controller.fill_results
 
     def request(self, tokens: int, dt_s: float, *, rid=None,
                 kv_frac_bytes: int = 0, kv_occupancy_s: float | None = None
@@ -284,6 +359,17 @@ class SustainabilityMeter:
                     "avoided_derate_j": t.avoided_derate_j,
                     "avoided_j": t.avoided_pause_j + t.avoided_derate_j,
                     "avoided_co2_kg": t.avoided_co2_kg,
+                },
+                "reconfig": {
+                    "steps": t.reconfig_steps,
+                    "decisions": dict(t.reconfig_decisions),
+                    "avoided_j": t.avoided_reconfig_j,
+                    "avoided_co2_kg": t.avoided_reconfig_co2_kg,
+                    "fill": {
+                        "jobs": t.fill_jobs,
+                        "op_j": t.fill_j,
+                        "work_units": t.fill_work_units,
+                    },
                 },
             },
         )

@@ -288,13 +288,38 @@ def _pad_to(x: jax.Array, mult: int) -> jax.Array:
     return jnp.pad(x, (0, pad)) if pad else x
 
 
+RNG_SOURCES = ("uniform", "trg", "trg_raw")
+
+
+def _rounding_uniforms(rng: jax.Array, shape, rng_source: str) -> jax.Array:
+    """The stochastic-rounding bump probabilities: jax.random by
+    default, or the Amoeba TRG bit stream (core/amoeba/trg.py) —
+    ``"trg"`` is the counter-corrected device, ``"trg_raw"`` the
+    uncorrected '0'-biased one (kept only to demonstrate the bias the
+    feedback removes)."""
+    if rng_source == "uniform":
+        return jax.random.uniform(rng, shape)
+    if rng_source in ("trg", "trg_raw"):
+        from repro.core.amoeba import trg
+        n = 1
+        for s in shape:
+            n *= int(s)
+        return trg.uniforms(rng, n,
+                            corrected=rng_source == "trg").reshape(shape)
+    raise ValueError(
+        f"rng_source={rng_source!r}: expected one of "
+        + " | ".join(RNG_SOURCES))
+
+
 def quantize_blocks(
-    x: jax.Array, kbits: int, *, rng: jax.Array | None = None
+    x: jax.Array, kbits: int, *, rng: jax.Array | None = None,
+    rng_source: str = "uniform",
 ) -> tuple[jax.Array, jax.Array]:
     """x (N,) float -> (codes uint32 in [0, 2^k), per-block scales fp32).
 
-    Symmetric absmax per 256-block; optional stochastic rounding (rng,
-    fed by the Amoeba TRG)."""
+    Symmetric absmax per 256-block; optional stochastic rounding (rng),
+    with ``rng_source`` selecting where the bump uniforms come from —
+    ``"trg"`` opts in to the Amoeba TRG's counter-corrected bit stream."""
     q = (1 << kbits) - 1
     xb = _pad_to(x.astype(jnp.float32), BLOCK).reshape(-1, BLOCK)
     scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) + 1e-12
@@ -309,7 +334,8 @@ def quantize_blocks(
         # producer chain.
         t = jax.lax.optimization_barrier(t)
         tf = jnp.floor(t)
-        bump = (t - tf) + jax.random.uniform(rng, t.shape) >= 1.0
+        u = _rounding_uniforms(rng, t.shape, rng_source)
+        bump = (t - tf) + u >= 1.0
         t = tf + bump.astype(jnp.float32)
     else:
         t = jnp.round(t)
@@ -340,11 +366,13 @@ def dequantize_blocks(
 
 
 def frac_encode_tensor(
-    x: jax.Array, kbits: int = 8, *, rng: jax.Array | None = None
+    x: jax.Array, kbits: int = 8, *, rng: jax.Array | None = None,
+    rng_source: str = "uniform",
 ) -> dict[str, Any]:
     flat = x.reshape(-1)
     n = flat.shape[0]
-    codes, scales = quantize_blocks(flat, kbits, rng=rng)
+    codes, scales = quantize_blocks(flat, kbits, rng=rng,
+                                    rng_source=rng_source)
     return {
         "words": pack_bits(codes, kbits),
         "scales": scales,

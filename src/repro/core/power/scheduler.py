@@ -34,6 +34,25 @@ class Action(Enum):
     PAUSE = "pause"
 
 
+def resolve_forecast(forecast, quantile: float) -> float:
+    """Reduce a forecast to one fraction: a scalar passes through; a
+    ``{quantile: frac}`` mapping (the predictor's simultaneous quantile
+    heads) selects the entry nearest ``quantile`` (ties go to the
+    lower, more conservative quantile).  Shared by the binary
+    ``CarbonAwareScheduler`` and the AMOEBA ``ReconfigController``
+    (core/amoeba/runtime.py), so both deciders read one forecast
+    convention."""
+    if isinstance(forecast, Mapping):
+        if not forecast:
+            raise ValueError(
+                "forecast quantile mapping is empty — pass None to "
+                "act on current supply only")
+        q = min(forecast,
+                key=lambda k: (abs(float(k) - quantile), float(k)))
+        return float(forecast[q])
+    return float(forecast)
+
+
 @dataclass(frozen=True)
 class SchedulerConfig:
     full_power_frac: float = 0.70     # supply/peak needed for full rate
@@ -80,16 +99,7 @@ class CarbonAwareScheduler:
         predictor's simultaneous quantile heads) selects the entry
         nearest ``cfg.forecast_quantile`` (ties go to the lower, more
         conservative quantile)."""
-        if isinstance(forecast, Mapping):
-            if not forecast:
-                raise ValueError(
-                    "forecast quantile mapping is empty — pass None to "
-                    "act on current supply only")
-            q = min(forecast,
-                    key=lambda k: (abs(float(k) - self.cfg.forecast_quantile),
-                                   float(k)))
-            return float(forecast[q])
-        return float(forecast)
+        return resolve_forecast(forecast, self.cfg.forecast_quantile)
 
     def decide(self, supply_frac: float, forecast_frac=None) -> Decision:
         c = self.cfg

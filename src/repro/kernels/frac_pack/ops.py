@@ -141,9 +141,10 @@ def _encode_jnp(flat, kbits: int):
     return codec.pack_bits(codes, kbits), scales
 
 
-@partial(jax.jit, static_argnames=("kbits",))
-def _encode_jnp_rng(flat, rng, kbits: int):
-    codes, scales = codec.quantize_blocks(flat, kbits, rng=rng)
+@partial(jax.jit, static_argnames=("kbits", "rng_source"))
+def _encode_jnp_rng(flat, rng, kbits: int, rng_source: str = "uniform"):
+    codes, scales = codec.quantize_blocks(flat, kbits, rng=rng,
+                                          rng_source=rng_source)
     return codec.pack_bits(codes, kbits), scales
 
 
@@ -191,10 +192,22 @@ def _finish_decode(x3, shape: tuple, dtype: str, n: int):
 
 def encode_tensor(x: jax.Array, kbits: int = 8, *,
                   rng: jax.Array | None = None,
+                  rng_source: str = "uniform",
                   mode: str | None = None) -> Blob:
     """Tensor -> FRAC blob via the fused pipeline.  Bit-identical to
-    ``codec.frac_encode_tensor`` for every mode and every k."""
+    ``codec.frac_encode_tensor`` for every mode and every k.
+    ``rng_source="trg"`` opts the stochastic rounding into the Amoeba
+    TRG's counter-corrected bit stream (jnp path only — the Pallas
+    kernel draws uniforms in-kernel)."""
     mode = _resolve_mode(kbits, mode)
+    if rng_source not in codec.RNG_SOURCES:
+        raise ValueError(
+            f"rng_source={rng_source!r}: expected one of "
+            + " | ".join(codec.RNG_SOURCES))
+    if rng_source != "uniform" and mode.startswith("pallas"):
+        raise ValueError(
+            f"rng_source={rng_source!r} requires a jnp mode; "
+            f"mode={mode!r} draws its uniforms in-kernel")
     flat = x.reshape(-1)
     n = flat.shape[0]
     if mode.startswith("pallas"):
@@ -205,7 +218,7 @@ def encode_tensor(x: jax.Array, kbits: int = 8, *,
         if rng is None:
             words, scales = _encode_jnp(flat, kbits)
         else:
-            words, scales = _encode_jnp_rng(flat, rng, kbits)
+            words, scales = _encode_jnp_rng(flat, rng, kbits, rng_source)
     return {
         "words": words,
         "scales": scales,

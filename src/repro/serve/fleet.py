@@ -44,6 +44,8 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.amoeba.configspace import serve_space
+from repro.core.amoeba.runtime import ReconfigController
 from repro.core.ese.meter import SustainabilityMeter
 from repro.core.ese.records import FleetReport, fleet_rollup
 from repro.core.power import traces
@@ -99,6 +101,7 @@ class RegionReplica:
 
     def __init__(self, spec: RegionSpec, mcfg: ModelConfig, params, *,
                  scheduler: CarbonAwareScheduler | None = None,
+                 controller: ReconfigController | None = None,
                  pause_policy: str = "serve_min",
                  forecast_quantiles=None, **engine_kwargs):
         if pause_policy not in ("serve_min", "hold"):
@@ -110,6 +113,10 @@ class RegionReplica:
         self.intensity = spec.intensity()
         self.scheduler = scheduler or CarbonAwareScheduler(
             SchedulerConfig(use_forecast=False))
+        # an AMOEBA ReconfigController replaces the binary scheduler:
+        # per-interval bucket widths come from its chosen HwConfig, and
+        # fill-only configs run a real primitive between serve waves
+        self.controller = controller
         self.pause_policy = pause_policy
         # {quantile: aligned series} — the band both the scheduler
         # (decide) and any forecast-aware routing read, so dispatch and
@@ -144,15 +151,29 @@ class RegionReplica:
         )
 
     def decision(self, interval: int) -> Decision:
+        use_forecast = (self.controller.use_forecast
+                        if self.controller is not None
+                        else self.scheduler.cfg.use_forecast)
         f = None
-        if self.scheduler.cfg.use_forecast \
-                and self.forecast_quantiles is not None:
+        if use_forecast and self.forecast_quantiles is not None:
             f = {float(q): self._at(v, interval)
                  for q, v in self.forecast_quantiles.items()}
+        if self.controller is not None:
+            return self.controller.decide(
+                self.headroom(interval), f,
+                intensity=self.carbon_intensity(interval))
         return self.scheduler.decide(self.headroom(interval), f)
 
-    def effective_max_batch(self, d: Decision) -> int:
-        """Scheduler-derated bucket width for this interval."""
+    def effective_max_batch(self, d) -> int:
+        """Scheduler-derated bucket width for this interval.  A
+        ReconfigDecision's width is its chosen config's ``bucket_frac``
+        (a width-0 config — idle or fill-only — falls back to the pause
+        policy: serving cannot abandon queued users)."""
+        if hasattr(d, "config"):
+            if d.config.bucket_frac == 0.0:
+                return 1 if self.pause_policy == "serve_min" else 0
+            return max(1, int(round(self.base_max_batch
+                                    * d.config.bucket_frac)))
         if d.action is Action.PAUSE:
             return 1 if self.pause_policy == "serve_min" else 0
         return max(1, int(round(self.base_max_batch * d.step_scale)))
@@ -161,26 +182,34 @@ class RegionReplica:
     def drain(self, interval: int) -> int:
         """Serve everything pending at this interval's derated bucket
         width, booking carbon at this interval's grid intensity.
-        Returns requests completed (0 under a held PAUSE)."""
-        if self.engine.queue_depth == 0:
+        Returns requests completed (0 under a held PAUSE).  Under a
+        ReconfigController a fill-config interval additionally executes
+        one queued PrimitiveJob between serve waves, metered."""
+        reconfig = self.controller is not None
+        if self.engine.queue_depth == 0 and not reconfig:
             return 0
         d = self.decision(interval)
         self.decisions.append(d)
         width = self.effective_max_batch(d)
-        if width == 0:                      # pause_policy="hold"
-            return 0
-        self.engine.max_batch = width
         self.meter.seek(interval * CURSOR_STRIDE)
-        tok0 = self.engine.stats.tokens
-        req0 = len(self.engine.reports)
-        t0 = time.perf_counter()
-        self.engine.run()
-        dt = time.perf_counter() - t0
-        served_tokens = self.engine.stats.tokens - tok0
-        if served_tokens > 0 and dt > 0:
-            tps = served_tokens / dt
-            self.tokens_per_s = 0.7 * self.tokens_per_s + 0.3 * tps
-        return len(self.engine.reports) - req0
+        if reconfig:
+            self.meter.book_reconfig(d)
+        served = 0
+        if width > 0 and self.engine.queue_depth > 0:
+            self.engine.max_batch = width
+            tok0 = self.engine.stats.tokens
+            req0 = len(self.engine.reports)
+            t0 = time.perf_counter()
+            self.engine.run()
+            dt = time.perf_counter() - t0
+            served_tokens = self.engine.stats.tokens - tok0
+            if served_tokens > 0 and dt > 0:
+                tps = served_tokens / dt
+                self.tokens_per_s = 0.7 * self.tokens_per_s + 0.3 * tps
+            served = len(self.engine.reports) - req0
+        if reconfig and d.config.fill is not None:
+            self.controller.run_fill(d, meter=self.meter)
+        return served
 
 
 class ServeFleet:
@@ -191,7 +220,8 @@ class ServeFleet:
                  policy: str = "carbon_latency", router: Router | None = None,
                  seed: int = 0, scheduler_cfg: SchedulerConfig | None = None,
                  pause_policy: str = "serve_min", paged: bool = True,
-                 use_forecast: bool = False, **engine_kwargs):
+                 use_forecast: bool = False, reconfig: bool = False,
+                 **engine_kwargs):
         if not regions:
             raise ValueError("ServeFleet needs at least one region")
         if paged and not model.supports_paged(mcfg):
@@ -209,9 +239,18 @@ class ServeFleet:
             fq = None
             if scfg.use_forecast:
                 fq = traces.quantile_forecast(spec.supply_frac())
+            ctrl = None
+            if reconfig:
+                # per-region AMOEBA controller over the serving ladder:
+                # KV width stays fixed (a live replica must not change
+                # KV numerics mid-run), only bucket width + fill vary
+                ctrl = ReconfigController(
+                    serve_space(),
+                    use_forecast=scfg.use_forecast,
+                    forecast_quantile=scfg.forecast_quantile)
             self.replicas.append(RegionReplica(
                 spec, mcfg, params,
-                scheduler=CarbonAwareScheduler(scfg),
+                scheduler=CarbonAwareScheduler(scfg), controller=ctrl,
                 pause_policy=pause_policy, forecast_quantiles=fq,
                 paged=paged, **engine_kwargs))
         self._route: dict[int, tuple[int, int]] = {}  # rid -> (replica, lrid)

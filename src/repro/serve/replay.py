@@ -183,7 +183,8 @@ class _SimRegion:
     times."""
 
     def __init__(self, spec: RegionSpec, *, scheduler_cfg: SchedulerConfig,
-                 pause_policy: str, base_max_batch: int):
+                 pause_policy: str, base_max_batch: int,
+                 tokens_per_s: float | None = None):
         self.spec = spec
         self.supply = spec.supply_frac()
         self.intensity = spec.intensity()
@@ -193,7 +194,9 @@ class _SimRegion:
             if scheduler_cfg.use_forecast else None)
         self.pause_policy = pause_policy
         self.base_max_batch = base_max_batch
-        self.tokens_per_s = float(spec.tokens_per_s_hint)
+        # calibrated (measured) throughput beats the static spec hint
+        self.tokens_per_s = (float(tokens_per_s) if tokens_per_s is not None
+                             else float(spec.tokens_per_s_hint))
         self.meter = SustainabilityMeter.from_trace(
             spec.trace, steps_per_interval=CURSOR_STRIDE,
             name=f"fleet/{spec.name}")
@@ -259,19 +262,41 @@ class _SimRegion:
             self.tokens += tokens
 
 
+def calibrate_tokens_per_s(fleet: ServeFleet) -> dict[str, float]:
+    """Measured per-region throughput from a fleet that has served real
+    traffic: each RegionReplica's ``tokens_per_s`` EWMA — the same
+    number its router snapshots carry — keyed by region name.  Feed the
+    result to ``replay_model(calibration=...)`` so the service model
+    runs at measured engine throughput instead of the static
+    ``tokens_per_s_hint``."""
+    return {r.spec.name: float(r.tokens_per_s) for r in fleet.replicas}
+
+
 def replay_model(regions: list[RegionSpec], cfg: ReplayConfig, *,
                  policy: str = "carbon_latency", seed: int = 0,
                  scheduler_cfg: SchedulerConfig | None = None,
                  pause_policy: str = "serve_min",
                  use_forecast: bool = False,
                  base_max_batch: int = 8,
+                 calibration: dict[str, float] | None = None,
                  router: Router | None = None) -> ReplayResult:
     """Engine-free replay for six-figure request counts: identical
     arrivals, routing and per-interval carbon booking, with decode
-    replaced by the calibrated service model."""
+    replaced by the calibrated service model.  ``calibration`` maps
+    region names to measured tokens/s (``calibrate_tokens_per_s``);
+    regions absent from it fall back to their spec hint."""
+    if calibration:
+        known = {s.name for s in regions}
+        stray = sorted(set(calibration) - known)
+        if stray:
+            raise ValueError(
+                f"replay_model: calibration names {stray} match no "
+                f"region; regions: {sorted(known)}")
     scfg = scheduler_cfg or SchedulerConfig(use_forecast=use_forecast)
     sims = [_SimRegion(s, scheduler_cfg=scfg, pause_policy=pause_policy,
-                       base_max_batch=base_max_batch) for s in regions]
+                       base_max_batch=base_max_batch,
+                       tokens_per_s=(calibration or {}).get(s.name))
+            for s in regions]
     rtr = router or Router(policy, seed=seed)
     n_int = min(len(s.supply) for s in sims)
     arr = arrival_times(cfg, n_int)

@@ -7,7 +7,13 @@ Production behaviours, all exercised by tests/examples on CPU:
   - preemption: SIGTERM/SIGINT triggers a final snapshot before exit;
   - power awareness: a CarbonAwareScheduler consults the supply trace
     every interval — RUN / DERATE (scale microbatches + crank FRAC
-    gradient compression) / PAUSE (snapshot, idle);
+    gradient compression) / PAUSE (snapshot, idle).  An AMOEBA
+    ``ReconfigController`` (core/amoeba/runtime.py) slots into the same
+    ``scheduler=`` seat: its per-interval ``HwConfig`` derates by
+    stepping *down the FRAC grad-compress ladder* (each kbits rung runs
+    through its own cached jitted step fn — identical to a fixed-kbits
+    run, so chosen-config outputs stay bit-identical), and fill-only
+    configs dispatch a real ``PrimitiveJob`` on the paused substrate;
   - nonvolatile mode: per-step FRAC delta snapshots (the paper's
     zero-rollover semantics) next to the exact-checkpoint cadence;
   - straggler mitigation: per-step wall-time EWMA; steps slower than
@@ -106,6 +112,11 @@ class Trainer:
         )
         self._stop = False
         self.metrics: list[dict] = []
+        # one jitted step fn per FRAC grad-compress width: a reconfig
+        # run that revisits a rung reuses the *same* compiled fn a
+        # fixed-kbits run would, so chosen-config outputs stay
+        # bit-identical to the non-reconfig path
+        self._step_fns: dict[int, Callable] = {}
 
     # -- state ----------------------------------------------------------------
     def init_state(self):
@@ -142,7 +153,6 @@ class Trainer:
         kbits = tcfg.grad_compress_kbits
         residual = (grad_compress.init_residual(params)
                     if kbits < 16 else None)
-        step_fn = jax.jit(self._make_step(kbits))
 
         prev_handlers = {}
         for sig in (signal.SIGTERM, signal.SIGINT):
@@ -153,14 +163,29 @@ class Trainer:
             step = start
             while step < tcfg.total_steps and not self._stop:
                 decision = self._power_decision(step)
+                reconfig = decision is not None and hasattr(decision,
+                                                            "config")
                 if decision is not None and decision.step_scale == 0.0:
                     paused_steps += 1
-                    self.meter.pause()
+                    if reconfig:
+                        self.meter.pause(decision=decision)
+                        if decision.config.fill is not None:
+                            # the substrate runs an intensive primitive
+                            # instead of idling through the interval
+                            self.scheduler.run_fill(decision,
+                                                    meter=self.meter)
+                    else:
+                        self.meter.pause()
                     step += 1  # simulated time advances; no work, no data
                     continue
+                k = (int(decision.config.grad_kbits) if reconfig
+                     else kbits)
+                step_fn = self._get_step_fn(k)
+                if k < 16 and residual is None:
+                    residual = grad_compress.init_residual(params)
                 batch = next(stream)
                 t0 = time.time()
-                if residual is not None:
+                if k < 16:
                     params, opt, residual, loss = step_fn(
                         params, opt, residual, batch
                     )
@@ -202,6 +227,12 @@ class Trainer:
         }
 
     # -- internals --------------------------------------------------------------
+    def _get_step_fn(self, kbits: int) -> Callable:
+        fn = self._step_fns.get(kbits)
+        if fn is None:
+            fn = self._step_fns[kbits] = jax.jit(self._make_step(kbits))
+        return fn
+
     def _make_step(self, kbits: int):
         mcfg, ocfg = self.mcfg, self.ocfg
         if kbits >= 16:
@@ -222,7 +253,13 @@ class Trainer:
             return None
         idx = min(step // self.tcfg.steps_per_power_interval,
                   len(self.tcfg.power_trace) - 1)
-        return self.scheduler.decide(float(self.tcfg.power_trace[idx]))
+        s = float(self.tcfg.power_trace[idx])
+        if hasattr(self.scheduler, "run_fill"):    # ReconfigController
+            # the meter knows this interval's grid intensity; the
+            # controller uses it to gate deferrable fill work
+            return self.scheduler.decide(
+                s, intensity=self.meter.carbon_intensity())
+        return self.scheduler.decide(s)
 
     def _checkpoint(self, step, params, opt, data_step):
         self.manager.save(step, {"params": params, "opt": opt},

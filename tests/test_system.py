@@ -357,7 +357,7 @@ def test_amoeba_engine_dispatch():
     assert Engine.MPE in dispatch("ntt")
     assert Engine.CPE in dispatch("sha3")
     assert dispatch("conv") == (Engine.MPE,)
-    with pytest.raises(KeyError):
+    with pytest.raises(ValueError, match=r"valid: conv \| ntt \| sha3"):
         dispatch("unknown")
 
 
