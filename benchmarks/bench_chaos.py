@@ -1,0 +1,145 @@
+"""Chaos-plane sweep: availability and carbon under region faults.
+
+Replays the same synthetic diurnal trace (serve/replay.py) on the
+skewed two-region fixture while a seeded ``ChaosSpec`` injects
+blackouts and replica crashes at increasing rates, in model mode so
+the sweep covers many thousands of requests per cell.  One row pair
+per (policy, blackout rate): SLO attainment (availability under
+faults) and operational gCO2/token (what resilience costs in carbon —
+re-dispatched work books on the destination's recovery ledger).
+
+Deterministic gates (CI, quick mode):
+
+  chaos_zero_lost          == 1.0 — across the whole sweep no request
+                           is ever lost (``requests_lost`` sums to 0:
+                           recovery re-queues everything)
+  chaos_engine_identical   == 1.0 — engine-mode replay under a
+                           blackout+crash schedule produces outputs
+                           bit-identical to the fault-free replay
+                           (greedy decode; recovery is exact)
+  chaos_report_schema_ok   == 1.0 — the robustness detail block
+                           validates under ese-fleet-report/v1
+
+``CHAOS_BENCH_QUICK=1`` trims the trace for CI smoke.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core.ese.records import (
+    validate_fleet_report_dict,
+    validate_robustness_detail,
+)
+from repro.serve.faults import ChaosSpec, RegionFault
+from repro.serve.fleet import ServeFleet, skewed_region_pair
+from repro.serve.replay import (
+    INTERVAL_S,
+    ReplayConfig,
+    arrival_times,
+    replay_engine,
+    replay_model,
+)
+
+BLACKOUT_RATES = (0.0, 0.01, 0.03)
+POLICIES = ("round_robin", "carbon_latency")
+
+
+def _quick() -> bool:
+    return bool(os.environ.get("CHAOS_BENCH_QUICK"))
+
+
+def bench_fault_sweep() -> list[tuple]:
+    """Model-mode availability/carbon vs fault rate, per policy."""
+    days = 1
+    n = 5_000 if _quick() else 50_000
+    regions = skewed_region_pair(days=days, seed=0)
+    names = [r.name for r in regions]
+    n_int = 288 * days
+    cfg = ReplayConfig(n_requests=n, seed=1)
+    rows = []
+    lost = 0
+    schema_ok = 1.0
+    for rate in BLACKOUT_RATES:
+        chaos = (ChaosSpec.generate(names, n_int, seed=7,
+                                    blackout_rate=rate,
+                                    crash_rate=rate / 2.0,
+                                    blackout_len=2)
+                 if rate > 0.0 else None)
+        for policy in POLICIES:
+            res = replay_model(regions, cfg, policy=policy, chaos=chaos)
+            tag = f"{policy}_bo{rate:g}"
+            rows.append((f"chaos_slo_{tag}", res.slo_attainment,
+                         f"frac_within_{cfg.slo_s:.0f}s n={n} "
+                         f"faults={len(chaos.faults) if chaos else 0}"))
+            rows.append((f"chaos_gco2_per_token_{tag}",
+                         res.gco2_per_token,
+                         "g_per_token model-mode under faults"))
+            d = res.report.to_json_dict()
+            try:
+                validate_fleet_report_dict(d)
+                rob = d["detail"].get("robustness")
+                if rob is not None:
+                    validate_robustness_detail(rob)
+                    lost += sum(r["requests_lost"] for r in rob.values())
+            except ValueError:
+                schema_ok = 0.0
+    rows.append(("chaos_zero_lost", float(lost == 0),
+                 "1.0 = requests_lost sums to 0 across the sweep "
+                 "(recovery re-queues everything)"))
+    rows.append(("chaos_report_schema_ok", schema_ok,
+                 "1.0 = robustness detail validates under "
+                 "ese-fleet-report/v1"))
+    return rows
+
+
+def bench_engine_chaos_identity() -> list[tuple]:
+    """Engine-mode differential: fault-free vs blackout+crash replay,
+    outputs compared bit-for-bit."""
+    import jax
+
+    from repro.configs import get_tiny
+    from repro.models import model
+
+    arch = "llama3.2-3b"
+    mcfg = get_tiny(arch)
+    params = model.init_params(mcfg, jax.random.PRNGKey(0))
+    cfg = ReplayConfig(n_requests=6 if _quick() else 10, seed=3,
+                       prompt_len=(3, 6), max_new=(3, 5))
+
+    def fleet(chaos=None):
+        return ServeFleet(mcfg, params, skewed_region_pair(days=1, seed=0),
+                          policy="carbon_latency", seed=0, max_batch=2,
+                          paged=True, page_size=4, chaos=chaos)
+
+    free = replay_engine(fleet(), cfg)
+    iv0 = int(arrival_times(cfg, 288)[0] // INTERVAL_S)
+    chaos = ChaosSpec(seed=2, faults=(
+        RegionFault(region="green", kind="blackout", at=iv0, duration=4),
+        RegionFault(region="dirty", kind="replica_crash", at=iv0),
+    ))
+    fl = fleet(chaos)
+    res = replay_engine(fl, cfg)
+    identical = res.outputs == free.outputs
+    rob = fl.robustness_counts()
+    moved = sum(r["retries"] + r["migrations"] + r["hedges"]
+                for r in rob.values())
+    lost = sum(r["requests_lost"] for r in rob.values())
+    return [
+        ("chaos_engine_identical",
+         float(identical and lost == 0
+               and np.isfinite(res.latency_s).all()),
+         f"1.0 = outputs bit-identical to fault-free replay "
+         f"n={cfg.n_requests} recovered_dispatches={moved}"),
+        ("chaos_engine_slo", res.slo_attainment,
+         f"engine-mode replay under blackout+crash "
+         f"gco2_per_token={res.gco2_per_token:.5f}"),
+    ]
+
+
+def run() -> list[tuple]:
+    out = []
+    for fn in (bench_fault_sweep, bench_engine_chaos_identity):
+        out.extend(fn())
+    return out

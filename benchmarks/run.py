@@ -43,6 +43,7 @@ def main(argv: list[str] | None = None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (
+        bench_chaos,
         bench_ese_estimates,
         bench_ese_wind,
         bench_fleet,
@@ -65,6 +66,7 @@ def main(argv: list[str] | None = None) -> None:
         ("ese_estimates", bench_ese_estimates),
         ("serve", bench_serve),
         ("fleet", bench_fleet),
+        ("chaos", bench_chaos),
         ("reconfig", bench_reconfig),
     ]
     if args.sections:

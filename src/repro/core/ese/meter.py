@@ -70,6 +70,16 @@ class _Totals:
     fill_jobs: int = 0           # fill primitives actually executed
     fill_j: float = 0.0          # fill operational energy (incl. modeled)
     fill_work_units: float = 0.0
+    # fault-recovery attribution (serve/faults.py chaos plane): re-work
+    # is itself a carbon cost (Chasing Carbon), so it is booked under
+    # its own ledger, not blended into the request totals
+    recovery_reprefills: int = 0      # lost-KV lanes replayed from prompt
+    recovery_tokens_replayed: int = 0
+    recovery_migrations: int = 0      # staged requests moved off a region
+    recovery_retries: int = 0         # backoff re-dispatches
+    recovery_hedges: int = 0          # deadline-driven duplicate dispatches
+    recovery_op_j: float = 0.0
+    recovery_co2_kg: float = 0.0
 
 
 class SustainabilityMeter:
@@ -332,6 +342,33 @@ class SustainabilityMeter:
         self.totals.flash_erases += int(erases)
         self.totals.flash_op_j += op_j
 
+    def recovery(self, dt_s: float = 0.0, *, reprefills: int = 0,
+                 tokens_replayed: int = 0, migrations: int = 0,
+                 retries: int = 0, hedges: int = 0) -> None:
+        """Book fault-recovery work (serve/faults.py chaos plane):
+        re-prefills of lost KV, staged-request migrations, backoff
+        retries and hedged duplicates.  ``dt_s`` is the extra compute
+        wall time the recovery consumed; it is priced at facility power
+        and charged to the operational + embodied ledgers like any
+        work, but *also* recorded under the recovery ledger so
+        ``report().detail["recovery"]`` states resilience's carbon
+        price.  The grid-interval cursor and ``wall_s`` are NOT
+        advanced: recovery overlaps intervals already booked."""
+        intensity = self.carbon_intensity()
+        op_j = self.facility_w * max(float(dt_s), 0.0)
+        if op_j > 0.0:
+            self.footprint.charge(embodied.tpu_chip(self.cfg.recycled_optin),
+                                  dt_s * self.cfg.chips, op_j)
+            co2 = op_j / 3.6e6 * intensity
+            self.totals.co2_operational_kg += co2
+            self.totals.recovery_co2_kg += co2
+        self.totals.recovery_op_j += op_j
+        self.totals.recovery_reprefills += int(reprefills)
+        self.totals.recovery_tokens_replayed += int(tokens_replayed)
+        self.totals.recovery_migrations += int(migrations)
+        self.totals.recovery_retries += int(retries)
+        self.totals.recovery_hedges += int(hedges)
+
     # -- reports -------------------------------------------------------------
     def report(self, name: str | None = None) -> EnergyReport:
         """Cumulative EnergyReport for everything metered so far,
@@ -370,6 +407,15 @@ class SustainabilityMeter:
                         "op_j": t.fill_j,
                         "work_units": t.fill_work_units,
                     },
+                },
+                "recovery": {
+                    "reprefills": t.recovery_reprefills,
+                    "tokens_replayed": t.recovery_tokens_replayed,
+                    "migrations": t.recovery_migrations,
+                    "retries": t.recovery_retries,
+                    "hedges": t.recovery_hedges,
+                    "op_j": t.recovery_op_j,
+                    "co2_kg": t.recovery_co2_kg,
                 },
             },
         )

@@ -266,6 +266,42 @@ class EnergyReport:
 
 FLEET_REPORT_SCHEMA = "ese-fleet-report/v1"
 
+# Per-region robustness counters the chaos plane (serve/faults.py)
+# surfaces under FleetReport detail["robustness"] — an ADDITIVE block:
+# ese-fleet-report/v1 stays the schema, absent means a pre-chaos
+# producer, present means every region carries exactly these keys.
+ROBUSTNESS_KEYS = ("timeouts", "retries", "hedges", "migrations",
+                   "requests_lost")
+
+
+def validate_robustness_detail(rob, *, where: str = "FleetReport") -> None:
+    """Validate a detail["robustness"] block: region name -> counter
+    dict holding exactly ROBUSTNESS_KEYS, each a non-negative int.
+    Raises ValueError naming the drifted key."""
+    if not isinstance(rob, Mapping):
+        raise ValueError(
+            f"{where} detail robustness: expects a mapping, "
+            f"got {type(rob).__name__}")
+    for name, counters in rob.items():
+        ctx = f"{where} detail robustness {name!r}"
+        if not isinstance(counters, Mapping):
+            raise ValueError(
+                f"{ctx}: expects a mapping, got {type(counters).__name__}")
+        missing = [k for k in ROBUSTNESS_KEYS if k not in counters]
+        if missing:
+            raise ValueError(f"{ctx}: missing key {missing[0]!r}")
+        stray = [k for k in counters if k not in ROBUSTNESS_KEYS]
+        if stray:
+            raise ValueError(f"{ctx}: unknown key {stray[0]!r}")
+        for k in ROBUSTNESS_KEYS:
+            v = counters[k]
+            if isinstance(v, bool) or not isinstance(v, int):
+                raise ValueError(
+                    f"{ctx}: key {k!r} must be an int, got {v!r}")
+            if v < 0:
+                raise ValueError(
+                    f"{ctx}: key {k!r} must be >= 0, got {v}")
+
 
 @dataclass(frozen=True)
 class FleetReport:
@@ -423,6 +459,9 @@ def validate_fleet_report_dict(d: Mapping) -> None:
             validate_report_dict(rep)
         except ValueError as e:
             raise ValueError(f"FleetReport region {name!r}: {e}") from e
+    detail = d.get("detail")
+    if isinstance(detail, Mapping) and "robustness" in detail:
+        validate_robustness_detail(detail["robustness"])
 
 
 def validate_report_dict(d: Mapping) -> None:

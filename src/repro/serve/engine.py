@@ -439,6 +439,42 @@ class ServeEngine:
                   and now - p.t_submit >= p.max_wall_s]:
             self._finish_timeout(r, now)
 
+    # -- chaos plane (serve/faults.py) ----------------------------------------
+    def evict_pending(self, rids=None) -> list[Request]:
+        """Remove pending requests (all of them, or the given rids)
+        without serving them: their spilled flash pages are discarded
+        and the Request objects — retained prompts included — returned
+        so the caller (the fleet's crash recovery / migration ladder)
+        can re-queue them on another replica."""
+        if rids is None:
+            victims = list(self._pending)
+        else:
+            want = set(rids)
+            victims = [p for p in self._pending if p.rid in want]
+        gone = {p.rid for p in victims}
+        self._pending = [p for p in self._pending if p.rid not in gone]
+        if self.flash is not None:
+            for p in victims:
+                self.flash.discard(p.rid)
+        return victims
+
+    def crash(self) -> list[Request]:
+        """Simulate the replica process dying: every in-flight and
+        staged request is lost — partial decode output, completed
+        results, per-request reports, all process memory.  Returns the
+        lost Requests (with their prompts) so the fleet can re-queue
+        them on survivors; under greedy decode a re-served prompt
+        regenerates bit-identical tokens, so recovery is exact.  The
+        meter survives (it is the fleet's view of the region, not
+        process state)."""
+        victims = self.evict_pending()
+        for p in victims:
+            p.output = []           # partial decode dies with the process
+        self._results.clear()
+        self.reports.clear()
+        self.recovery.clear()
+        return victims
+
     def _deadline_max_new(self, r: Request) -> int:
         """Per-request decode budget for the next loop entry: the
         remaining wall budget divided by the measured step time (EWMA),
@@ -906,6 +942,7 @@ class ServeEngine:
         prompts = np.zeros((len(reqs), S), np.int32)
         for i, r in enumerate(reqs):
             prompts[i, : lens[i]] = r.prompt
+        t_rec0 = time.time()
         tok0, cache = self._prefill(
             self.params, {"tokens": jnp.asarray(prompts)}, jnp.asarray(lens))
         self.stats.prefills += 1
@@ -928,6 +965,10 @@ class ServeEngine:
             rec = self.recovery[r.rid]
             rec["reprefill"] = True
             rec["tokens_replayed"] += int(lens[i])
+        # resilience has a carbon price: the replayed prefill's compute
+        # goes to the meter's recovery ledger (detail["recovery"])
+        self.meter.recovery(time.time() - t_rec0, reprefills=len(failed),
+                            tokens_replayed=int(lens.sum()))
 
     def _serve_wave(self, wreqs, wave_leaves, treedef, t0map) -> None:
         """One non-oversubscribed paged decode over a wave-sized pool —

@@ -1,11 +1,41 @@
-"""Deterministic fault injection for the recycled-flash spill tier.
+"""Deterministic fault injection: flash reads AND fleet-level chaos.
+
+Two layers share this module, both seeded and replayable so a CI
+matrix over fixed seeds replays byte-identical fault traces:
+
+1. **Device faults** (``FaultInjector``/``FaultConfig``/``FaultEvent``)
+   — per-page flash read errors for the recycled-NAND spill tier
+   (serve/flash_tier.py), unchanged since PR 6.
+2. **Fleet faults** (``FaultPlane``/``ChaosSpec``/``RegionFault``) —
+   region-scoped faults injected on the grid-interval clock the fleet
+   replay harness drives (serve/fleet.py, serve/replay.py):
+
+     ``blackout``       region supply → 0 for ``duration`` intervals
+                        (the region cannot serve and is excluded from
+                        routing; queued work migrates or backs off);
+     ``brownout``       headroom collapses to ``severity`` × its trace
+                        value (the degradation ladder derates);
+     ``replica_crash``  the replica process dies at interval ``at``:
+                        all in-flight and staged requests are lost and
+                        the fleet re-queues them on survivors
+                        (token-identical under greedy decode);
+     ``flash_storm``    ``severity`` fraction of the region's flash
+                        tier's live blocks dies at once (PR-6 tier;
+                        live pages drain through the read ladder);
+     ``telemetry``      the router stops seeing fresh snapshots from
+                        the region: ``severity < 1`` freezes the last
+                        pre-fault snapshot (staleness grows each
+                        interval), ``severity >= 1`` drops them
+                        entirely (the health tracker excludes the
+                        region until telemetry resumes).
+
+The flash read-side model (unchanged):
 
 The tier (serve/flash_tier.py) stores spilled KV pages as FRAC cell
 levels on simulated recycled-NAND blocks; every read is a chance for
 raw bit errors (RBER, wear.py).  This module decides, reproducibly,
-*which* cells misread on *which* read — so a CI matrix over fixed seeds
-replays byte-identical fault traces — and models the read-side half of
-the recovery ladder:
+*which* cells misread on *which* read, and models the read-side half
+of the recovery ladder:
 
   stage 1  ECC within budget: the LDPC engine corrects up to
            ``wear.ECC_LIMIT`` raw errors per read "for free" (its
@@ -129,3 +159,151 @@ class FaultInjector:
         return [ev for ev in self.cfg.events
                 if ev.kind in ("block_death", "capacity_loss")
                 and ev.at == self.n_spills]
+
+
+# ---------------------------------------------------------------------------
+# Fleet-level chaos plane
+# ---------------------------------------------------------------------------
+
+REGION_FAULT_KINDS = (
+    "blackout", "brownout", "replica_crash", "flash_storm", "telemetry")
+
+
+@dataclass(frozen=True)
+class RegionFault:
+    """One region-scoped fault on the fleet's interval clock.
+
+    ``at`` is the first simulated interval the fault is active;
+    ``duration`` is how many consecutive intervals it holds (crashes
+    and storms are instantaneous — they fire once at ``at`` and
+    duration is ignored).  ``severity`` scales the effect:
+
+      blackout       ignored (supply is zero, period)
+      brownout       headroom multiplier in [0, 1)
+      replica_crash  ignored
+      flash_storm    fraction of live flash blocks killed (0..1]
+      telemetry      < 1.0: snapshots freeze (stale); >= 1.0: dropped
+    """
+
+    region: str
+    kind: str
+    at: int
+    duration: int = 1
+    severity: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in REGION_FAULT_KINDS:
+            raise ValueError(
+                f"RegionFault.kind={self.kind!r}: expected one of "
+                f"{REGION_FAULT_KINDS}")
+        if self.at < 0:
+            raise ValueError("RegionFault.at is a 0-based interval index")
+        if self.duration < 1:
+            raise ValueError("RegionFault.duration must be >= 1")
+        if self.severity < 0.0:
+            raise ValueError("RegionFault.severity must be >= 0")
+
+    def active(self, interval: int) -> bool:
+        return self.at <= interval < self.at + self.duration
+
+
+@dataclass(frozen=True)
+class ChaosSpec:
+    """A seeded, replayable fault schedule for one fleet replay.
+
+    Either list ``faults`` explicitly (tests, CI smoke) or let
+    ``generate`` draw a random-but-deterministic schedule from
+    ``seed`` (benchmarks sweeping fault rates)."""
+
+    seed: int = 0
+    faults: tuple = ()               # RegionFaults, any order
+
+    def __post_init__(self):
+        for f in self.faults:
+            if not isinstance(f, RegionFault):
+                raise ValueError(
+                    f"ChaosSpec.faults holds {type(f).__name__}, "
+                    "expected RegionFault")
+
+    @staticmethod
+    def generate(regions: list[str], n_intervals: int, seed: int = 0,
+                 blackout_rate: float = 0.0, crash_rate: float = 0.0,
+                 storm_rate: float = 0.0, blackout_len: int = 2
+                 ) -> "ChaosSpec":
+        """Draw a deterministic schedule: each (region, interval) cell
+        independently starts a fault with the given per-interval rate.
+        Faults never start in the last ``blackout_len`` intervals so a
+        terminal blackout cannot outlive the trace."""
+        rng = np.random.default_rng(seed)
+        faults = []
+        horizon = max(1, n_intervals - blackout_len)
+        for name in regions:
+            for iv in range(horizon):
+                u = rng.random(3)
+                if u[0] < blackout_rate:
+                    faults.append(RegionFault(
+                        region=name, kind="blackout", at=iv,
+                        duration=blackout_len))
+                if u[1] < crash_rate:
+                    faults.append(RegionFault(
+                        region=name, kind="replica_crash", at=iv))
+                if u[2] < storm_rate:
+                    faults.append(RegionFault(
+                        region=name, kind="flash_storm", at=iv,
+                        severity=0.25))
+        return ChaosSpec(seed=seed, faults=tuple(faults))
+
+
+class FaultPlane:
+    """Replays a ChaosSpec against the fleet's interval clock.
+
+    The fleet asks, per interval and per region, which faults apply;
+    one-shot faults (crash, storm) are consumed exactly once so a
+    replay re-running an interval (drain loop) does not double-fire.
+    """
+
+    def __init__(self, spec: ChaosSpec | None = None):
+        self.spec = spec or ChaosSpec()
+        self._fired: set = set()      # id-keys of consumed one-shot faults
+
+    # one-shot kinds fire exactly once at their `at` interval
+    _ONE_SHOT = ("replica_crash", "flash_storm")
+
+    def blackout(self, region: str, interval: int) -> bool:
+        return any(f.kind == "blackout" and f.region == region
+                   and f.active(interval) for f in self.spec.faults)
+
+    def brownout(self, region: str, interval: int) -> float | None:
+        """Headroom multiplier if a brownout is active, else None."""
+        worst = None
+        for f in self.spec.faults:
+            if f.kind == "brownout" and f.region == region \
+                    and f.active(interval):
+                worst = f.severity if worst is None else min(worst,
+                                                             f.severity)
+        return worst
+
+    def telemetry(self, region: str, interval: int) -> float | None:
+        """Telemetry fault severity if active (see RegionFault), else
+        None — fresh snapshots flow."""
+        worst = None
+        for f in self.spec.faults:
+            if f.kind == "telemetry" and f.region == region \
+                    and f.active(interval):
+                worst = f.severity if worst is None else max(worst,
+                                                             f.severity)
+        return worst
+
+    def one_shots(self, region: str, interval: int) -> list[RegionFault]:
+        """Crash/storm faults due now, each returned exactly once."""
+        due = []
+        for i, f in enumerate(self.spec.faults):
+            if f.kind in self._ONE_SHOT and f.region == region \
+                    and f.at == interval and i not in self._fired:
+                self._fired.add(i)
+                due.append(f)
+        return due
+
+    def reset(self):
+        """Forget consumed one-shots (fresh replay of the same spec)."""
+        self._fired.clear()

@@ -359,6 +359,24 @@ class FlashTier:
         for blk in live[:k]:
             self._kill_block(blk.block_id)
 
+    def storm(self, severity: float = 0.25, *, seed: int = 0) -> int:
+        """Block-death storm (the fleet chaos plane's ``flash_storm``
+        fault): a ``severity`` fraction of live blocks dies at once,
+        chosen by a seeded draw rather than by wear — a storm hits a
+        die/plane, not the blocks the wear policy would retire next.
+        Live pages drain through the read ladder exactly as in
+        ``_kill_block``; unrecoverable pages re-prefill at the engine.
+        Returns the number of blocks killed."""
+        live = sorted(self._live_blocks(), key=lambda b: b.block_id)
+        if not live:
+            return 0
+        k = max(1, min(len(live), int(round(severity * len(live)))))
+        rng = np.random.default_rng(seed)
+        idx = rng.choice(len(live), size=k, replace=False)
+        for j in sorted(int(x) for x in idx):
+            self._kill_block(live[j].block_id)
+        return k
+
     # -- energy drain ----------------------------------------------------------
     def drain_io(self) -> dict:
         """I/O totals since the previous drain — the engine books these

@@ -34,9 +34,31 @@ Region model (docs/fleet.md):
 
 Per-region meters roll up into one ``FleetReport``
 (``ese-fleet-report/v1``, core/ese/records.py) via ``fleet_report()``.
+
+Fault tolerance (docs/fleet.md#fault-tolerance):
+
+Attaching a ``ChaosSpec``/``FaultPlane`` (serve/faults.py) turns on
+the chaos plane: per interval the fleet applies region-scoped faults
+(blackout, brownout, replica crash, flash storm, telemetry loss),
+reports region health to the router, migrates staged work off dark
+regions, re-dispatches backlogged requests under the seeded
+``RetrySchedule`` backoff, and hedges deadline-holding requests whose
+home region went dark.  Every region also walks a **monotone
+graceful-degradation ladder** (``degradation_stage``) derived from
+the same SchedulerConfig thresholds the carbon scheduler derates on:
+
+    none → shed_fill → derate → spill → migrate → reject
+
+Recovery never drops a request: crash victims re-queue from their
+retained prompts and greedy decode regenerates bit-identical tokens
+(CI-gated), while the re-work is booked to each meter's recovery
+ledger (``EnergyReport.detail["recovery"]``).  With no chaos plane
+attached, none of this machinery runs and fleet behavior is
+bit-identical to the pre-chaos fleet.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 import warnings
 from dataclasses import dataclass
@@ -47,7 +69,7 @@ from repro.configs.base import ModelConfig
 from repro.core.amoeba.configspace import serve_space
 from repro.core.amoeba.runtime import ReconfigController
 from repro.core.ese.meter import SustainabilityMeter
-from repro.core.ese.records import FleetReport, fleet_rollup
+from repro.core.ese.records import ROBUSTNESS_KEYS, FleetReport, fleet_rollup
 from repro.core.power import traces
 from repro.core.power.scheduler import (
     Action,
@@ -57,13 +79,45 @@ from repro.core.power.scheduler import (
 )
 from repro.models import model
 from repro.serve.engine import ServeEngine
-from repro.serve.router import RegionSnapshot, Router
+from repro.serve.faults import ChaosSpec, FaultPlane
+from repro.serve.router import RegionSnapshot, RetrySchedule, Router
 
 # The meter's interval cursor advances by one per booked request; the
 # fleet pins it to the *simulated* grid interval instead by seeking to
 # interval * CURSOR_STRIDE before each drain — any drain smaller than
 # the stride then books every request at that interval's intensity.
 CURSOR_STRIDE = 1 << 20
+
+# Graceful-degradation ladder, least → most severe.  Monotone in
+# headroom by construction (degradation_stage), test-locked by
+# tests/test_chaos.py.
+DEGRADE_LADDER = ("none", "shed_fill", "derate", "spill", "migrate",
+                  "reject")
+
+
+def degradation_stage(headroom: float, cfg: SchedulerConfig) -> str:
+    """Ladder stage for a region at the given (fault-scaled) headroom.
+
+    The breakpoints come from the SAME SchedulerConfig thresholds the
+    carbon-aware scheduler derates on, so degradation and carbon
+    policy share one mechanism: above ``full_power_frac`` nothing
+    degrades; below it, optional fill work sheds first (it is the most
+    deferrable); through the scheduler's derate band the bucket width
+    shrinks (the scheduler does this on its own — the stage names it);
+    under ``threshold_frac`` the region leans on the flash spill tier,
+    then migrates staged work away, and at zero headroom it rejects
+    new admissions outright."""
+    if headroom <= 0.0:
+        return "reject"
+    if headroom < cfg.threshold_frac / 2.0:
+        return "migrate"
+    if headroom < cfg.threshold_frac:
+        return "spill"
+    if headroom < (cfg.threshold_frac + cfg.full_power_frac) / 2.0:
+        return "derate"
+    if headroom < cfg.full_power_frac:
+        return "shed_fill"
+    return "none"
 
 
 @dataclass(frozen=True)
@@ -130,6 +184,10 @@ class RegionReplica:
         self.base_max_batch = self.engine.max_batch
         self.tokens_per_s = float(spec.tokens_per_s_hint)
         self.decisions: list[Decision] = []   # one per drained interval
+        # chaos plane: None fault-free; 0.0 under blackout, the
+        # brownout severity otherwise — scales the trace headroom the
+        # scheduler/ladder/router all see
+        self.fault_headroom_scale: float | None = None
 
     # -- per-interval state --------------------------------------------------
     def _at(self, series: np.ndarray, interval: int) -> float:
@@ -139,7 +197,10 @@ class RegionReplica:
         return self._at(self.intensity, interval)
 
     def headroom(self, interval: int) -> float:
-        return self._at(self.supply, interval)
+        h = self._at(self.supply, interval)
+        if self.fault_headroom_scale is not None:
+            h *= self.fault_headroom_scale
+        return h
 
     def snapshot(self, interval: int) -> RegionSnapshot:
         return RegionSnapshot(
@@ -179,12 +240,14 @@ class RegionReplica:
         return max(1, int(round(self.base_max_batch * d.step_scale)))
 
     # -- serving -------------------------------------------------------------
-    def drain(self, interval: int) -> int:
+    def drain(self, interval: int, *, shed_fill: bool = False) -> int:
         """Serve everything pending at this interval's derated bucket
         width, booking carbon at this interval's grid intensity.
         Returns requests completed (0 under a held PAUSE).  Under a
         ReconfigController a fill-config interval additionally executes
-        one queued PrimitiveJob between serve waves, metered."""
+        one queued PrimitiveJob between serve waves, metered —
+        ``shed_fill`` skips it (degradation-ladder stage shed_fill or
+        worse: deferrable fill work is the first thing to go)."""
         reconfig = self.controller is not None
         if self.engine.queue_depth == 0 and not reconfig:
             return 0
@@ -207,7 +270,7 @@ class RegionReplica:
                 tps = served_tokens / dt
                 self.tokens_per_s = 0.7 * self.tokens_per_s + 0.3 * tps
             served = len(self.engine.reports) - req0
-        if reconfig and d.config.fill is not None:
+        if reconfig and d.config.fill is not None and not shed_fill:
             self.controller.run_fill(d, meter=self.meter)
         return served
 
@@ -221,6 +284,9 @@ class ServeFleet:
                  seed: int = 0, scheduler_cfg: SchedulerConfig | None = None,
                  pause_policy: str = "serve_min", paged: bool = True,
                  use_forecast: bool = False, reconfig: bool = False,
+                 chaos: ChaosSpec | FaultPlane | None = None,
+                 retry: RetrySchedule | None = None,
+                 interval_s: float = 300.0,
                  **engine_kwargs):
         if not regions:
             raise ValueError("ServeFleet needs at least one region")
@@ -253,49 +319,302 @@ class ServeFleet:
                 scheduler=CarbonAwareScheduler(scfg), controller=ctrl,
                 pause_policy=pause_policy, forecast_quantiles=fq,
                 paged=paged, **engine_kwargs))
-        self._route: dict[int, tuple[int, int]] = {}  # rid -> (replica, lrid)
+        self._route: dict[int, tuple[int, int]] = {}  # rid -> first placement
         self.dispatch_trace: list[tuple[int, str]] = []
         self._next_rid = 0
+        # -- chaos plane state (all of it inert when chaos is None) ----------
+        self.chaos = (FaultPlane(chaos) if isinstance(chaos, ChaosSpec)
+                      else chaos)
+        self.retry = retry or RetrySchedule(seed=seed)
+        self.interval_s = float(interval_s)
+        n = len(self.replicas)
+        self._requests: dict[int, tuple] = {}   # rid -> (prompt, max_new, kw)
+        self._done: dict[int, list[int]] = {}   # fleet-harvested results:
+        #   completed outputs survive a replica crash because the fleet,
+        #   not the engine, is their system of record
+        self._placements: dict[int, list[tuple[int, int]]] = {}
+        self._by_engine: dict[tuple[int, int], int] = {}
+        self._backlog: list[int] = []           # rids awaiting (re)dispatch
+        self._attempts: dict[int, int] = {}     # rid -> backoff attempts
+        self._retry_at: dict[int, int] = {}     # rid -> earliest interval
+        self._deadline: dict[int, float] = {}   # rid -> deadline_s
+        self._submit_iv: dict[int, int] = {}
+        self._hedged: set[int] = set()
+        self._evicted_from: dict[int, str] = {}  # rid -> region it fled
+        self._blacked = [False] * n
+        self._stage = ["none"] * n
+        self._tele_age = [0] * n
+        self._frozen_snap: list[RegionSnapshot | None] = [None] * n
+        self.ladder_log: dict[str, list[tuple[int, str]]] = {
+            r.spec.name: [] for r in self.replicas}
+        self.robustness: dict[str, dict] = {
+            r.spec.name: {k: 0 for k in ROBUSTNESS_KEYS}
+            for r in self.replicas}
 
     def set_interval(self, interval: int) -> None:
         """Advance simulated grid time (the replay harness drives this)."""
         self.interval = int(interval)
 
+    # -- snapshots under chaos ----------------------------------------------
+    def _snapshot_for(self, i: int) -> RegionSnapshot:
+        """This region's router-visible snapshot: live telemetry, or
+        the frozen pre-fault snapshot aged by the telemetry outage."""
+        if self.chaos is not None and self._frozen_snap[i] is not None:
+            return dataclasses.replace(self._frozen_snap[i],
+                                       age=self._tele_age[i])
+        return self.replicas[i].snapshot(self.interval)
+
+    def _eligible_snaps(self, *, exclude: int | None = None
+                        ) -> tuple[list[RegionSnapshot], list[int]]:
+        """Snapshots the router may dispatch to, plus their replica
+        indices.  Regions at the ladder's reject stage are withheld by
+        the fleet itself (admission control); dead/stale exclusion is
+        the router's job."""
+        snaps, idx = [], []
+        for i in range(len(self.replicas)):
+            if i == exclude:
+                continue
+            if self.chaos is not None and self._stage[i] == "reject":
+                continue
+            snaps.append(self._snapshot_for(i))
+            idx.append(i)
+        return snaps, idx
+
     # -- dispatch ------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               **kw) -> int:
+               deadline_s: float | None = None, **kw) -> int:
         """Route one request to a region at the current interval and
-        enqueue it there.  Returns a fleet-global request id."""
-        snaps = [r.snapshot(self.interval) for r in self.replicas]
-        ri = self.router.pick(snaps)
-        lrid = self.replicas[ri].engine.submit(prompt, max_new_tokens, **kw)
+        enqueue it there.  Returns a fleet-global request id.  When no
+        region is dispatchable (all dark/stale/rejecting) the request
+        is backlogged and re-dispatched under the retry schedule —
+        backpressure, not an exception.  ``deadline_s`` arms hedged
+        re-dispatch: if the home region goes dark and the deadline
+        approaches, a duplicate goes to a healthy region (first
+        completion wins; greedy decode makes both identical)."""
         rid = self._next_rid
         self._next_rid += 1
-        self._route[rid] = (ri, lrid)
-        self.dispatch_trace.append((rid, self.replicas[ri].spec.name))
+        prompt = np.asarray(prompt, np.int32)
+        self._requests[rid] = (prompt, int(max_new_tokens), dict(kw))
+        self._submit_iv[rid] = self.interval
+        if deadline_s is not None:
+            self._deadline[rid] = float(deadline_s)
+        snaps, idx = self._eligible_snaps()
+        pick = self.router.pick(snaps)
+        if pick == Router.NO_CAPACITY:
+            self._backlog.append(rid)
+            return rid
+        self._dispatch(rid, idx[pick])
         return rid
+
+    def _dispatch(self, rid: int, ri: int) -> None:
+        prompt, mnt, kw = self._requests[rid]
+        lrid = self.replicas[ri].engine.submit(prompt, mnt, **kw)
+        self._placements.setdefault(rid, []).append((ri, lrid))
+        self._by_engine[(ri, lrid)] = rid
+        if rid not in self._route:
+            self._route[rid] = (ri, lrid)
+        self.dispatch_trace.append((rid, self.replicas[ri].spec.name))
+
+    # -- chaos plane ---------------------------------------------------------
+    def _apply_chaos(self, iv: int) -> None:
+        """Apply this interval's faults: supply overrides, crashes,
+        storms, telemetry aging, health reports, ladder stages."""
+        for i, r in enumerate(self.replicas):
+            name = r.spec.name
+            bo = self.chaos.blackout(name, iv)
+            br = self.chaos.brownout(name, iv)
+            r.fault_headroom_scale = 0.0 if bo else br
+            self._blacked[i] = bo
+            healthy = not bo
+            for f in self.chaos.one_shots(name, iv):
+                if f.kind == "replica_crash":
+                    healthy = False
+                    self._crash(i)
+                elif f.kind == "flash_storm" and r.engine.flash is not None:
+                    r.engine.flash.storm(
+                        f.severity, seed=self.chaos.spec.seed + iv)
+            self.router.observe(name, healthy=healthy)
+            tel = self.chaos.telemetry(name, iv)
+            if tel is None:
+                self._tele_age[i] = 0
+                self._frozen_snap[i] = None
+            else:
+                if self._frozen_snap[i] is None:
+                    self._frozen_snap[i] = r.snapshot(iv)
+                if tel >= 1.0:      # dropped outright: stale immediately
+                    self._tele_age[i] = self.router.max_snapshot_age + 1
+                else:               # frozen: staleness grows
+                    self._tele_age[i] += 1
+            stage = degradation_stage(r.headroom(iv), r.scheduler.cfg)
+            self._stage[i] = stage
+            self.ladder_log[name].append((iv, stage))
+
+    def _crash(self, i: int) -> None:
+        """Replica ``i`` dies: completed results were already harvested
+        into ``_done``; in-flight/staged requests re-queue from their
+        retained prompts onto survivors (PR-6 style exact recovery —
+        greedy decode regenerates the same tokens)."""
+        name = self.replicas[i].spec.name
+        victims = self.replicas[i].engine.crash()
+        for p in victims:
+            rid = self._by_engine.pop((i, p.rid), None)
+            if rid is None:
+                continue
+            self._placements[rid] = [
+                pl for pl in self._placements.get(rid, [])
+                if pl != (i, p.rid)]
+            if rid not in self._done and rid not in self._backlog:
+                self._backlog.append(rid)
+                self._evicted_from[rid] = name
+
+    def _migrate_staged(self, i: int) -> None:
+        """Pull region ``i``'s staged (undecoded) requests back into
+        the fleet backlog so they re-dispatch elsewhere — the ladder's
+        migrate stage, and the only way work leaves a dark region."""
+        name = self.replicas[i].spec.name
+        for p in self.replicas[i].engine.evict_pending():
+            rid = self._by_engine.pop((i, p.rid), None)
+            if rid is None:
+                continue
+            self._placements[rid] = [
+                pl for pl in self._placements.get(rid, [])
+                if pl != (i, p.rid)]
+            if rid not in self._done and rid not in self._backlog:
+                self._backlog.append(rid)
+                self._evicted_from[rid] = name
+
+    def _migration_targets_ok(self) -> bool:
+        """Migration needs somewhere strictly better to go: a healthy
+        region at a pre-spill ladder stage.  Without one, staged work
+        stays put (a degraded region still serves; the backlog would
+        just churn)."""
+        for i, r in enumerate(self.replicas):
+            if self._blacked[i]:
+                continue
+            if self._stage[i] in ("none", "shed_fill", "derate") \
+                    and self.router.health_state(r.spec.name) == "ok":
+                return True
+        return False
+
+    def _redispatch(self, iv: int) -> None:
+        """Drain the backlog: each due request re-routes through the
+        (health-aware) router; NO_CAPACITY re-arms its seeded
+        exponential backoff.  Requests are never dropped — past
+        ``max_retries`` they keep retrying at the backoff cap."""
+        still: list[int] = []
+        for rid in self._backlog:
+            if rid in self._done:
+                continue
+            if self._retry_at.get(rid, 0) > iv:
+                still.append(rid)
+                continue
+            snaps, idx = self._eligible_snaps()
+            pick = self.router.pick(snaps)
+            if pick == Router.NO_CAPACITY:
+                a = self._attempts.get(rid, 0)
+                self._attempts[rid] = a + 1
+                delay = self.retry.backoff_s(
+                    rid, min(a, self.retry.cfg.max_retries - 1))
+                self._retry_at[rid] = iv + max(
+                    1, int(np.ceil(delay / self.interval_s)))
+                still.append(rid)
+                continue
+            ri = idx[pick]
+            self._dispatch(rid, ri)
+            dest = self.replicas[ri].spec.name
+            src = self._evicted_from.pop(rid, None)
+            if src is not None:
+                self.robustness[src]["migrations"] += 1
+                self.replicas[ri].meter.recovery(migrations=1)
+            if self._attempts.get(rid, 0) > 0:
+                self.robustness[dest]["retries"] += \
+                    self._attempts.pop(rid)
+                self.replicas[ri].meter.recovery(retries=1)
+        self._backlog = still
+
+    def _maybe_hedge(self, iv: int) -> None:
+        """Deadline-aware hedged re-dispatch: a request whose home
+        region went dark/stale gets one duplicate on a healthy region
+        once its seeded hedge offset elapses — always strictly before
+        its deadline (RetrySchedule.hedge_delay_s).  First completion
+        wins; under greedy decode both copies are bit-identical, so
+        hedging buys latency, never changes tokens."""
+        for rid, dl in self._deadline.items():
+            if rid in self._hedged or rid in self._done:
+                continue
+            places = self._placements.get(rid)
+            if not places:
+                continue
+            ri = places[-1][0]
+            name = self.replicas[ri].spec.name
+            if self.router.health_state(name) == "ok" \
+                    and self._tele_age[ri] <= self.router.max_snapshot_age:
+                continue
+            hd = self.retry.hedge_delay_s(rid, dl)
+            if hd is None:
+                continue
+            if (iv - self._submit_iv[rid]) * self.interval_s < hd:
+                continue
+            snaps, idx = self._eligible_snaps(exclude=ri)
+            pick = self.router.pick(snaps)
+            if pick == Router.NO_CAPACITY:
+                continue
+            rj = idx[pick]
+            prompt, mnt, kw = self._requests[rid]
+            lrid = self.replicas[rj].engine.submit(prompt, mnt, **kw)
+            self._placements[rid].append((rj, lrid))
+            self._by_engine[(rj, lrid)] = rid
+            self._hedged.add(rid)
+            self.robustness[self.replicas[rj].spec.name]["hedges"] += 1
+            self.replicas[rj].meter.recovery(hedges=1)
+
+    def _harvest(self) -> None:
+        """Copy completed engine results into the fleet's own ledger:
+        once here, a later crash cannot lose them."""
+        for rid, places in self._placements.items():
+            if rid in self._done:
+                continue
+            for (ri, lrid) in places:
+                res = self.replicas[ri].engine._results
+                if lrid in res:
+                    self._done[rid] = res[lrid]
+                    break
 
     # -- serving -------------------------------------------------------------
     def run(self) -> dict[int, list[int]]:
         """Drain every region at the current interval (each region's
         scheduler derates its own bucket width; carbon books at its own
         intensity), then return all completed results so far keyed by
-        fleet rid."""
-        for r in self.replicas:
-            r.drain(self.interval)
+        fleet rid.  With a chaos plane attached, faults apply first,
+        staged work migrates off dark/overloaded regions, the backlog
+        re-dispatches under backoff, and deadline hedges fire."""
+        iv = self.interval
+        if self.chaos is not None:
+            self._apply_chaos(iv)
+            targets_ok = self._migration_targets_ok()
+            for i in range(len(self.replicas)):
+                if self._blacked[i] or (
+                        targets_ok
+                        and self._stage[i] in ("migrate", "reject")):
+                    self._migrate_staged(i)
+            self._redispatch(iv)
+            self._maybe_hedge(iv)
+        for i, r in enumerate(self.replicas):
+            if self.chaos is not None and self._blacked[i]:
+                continue            # dark region: no serving, no booking
+            shed = self.chaos is not None and self._stage[i] != "none"
+            r.drain(iv, shed_fill=shed)
+        self._harvest()
         return self.results()
 
     def results(self) -> dict[int, list[int]]:
-        out = {}
-        for rid, (ri, lrid) in self._route.items():
-            res = self.replicas[ri].engine._results
-            if lrid in res:
-                out[rid] = res[lrid]
-        return out
+        self._harvest()
+        return dict(self._done)
 
     @property
     def queue_depth(self) -> int:
-        return sum(r.engine.queue_depth for r in self.replicas)
+        return (sum(r.engine.queue_depth for r in self.replicas)
+                + len(self._backlog))
 
     def dispatch_counts(self) -> dict[str, int]:
         counts = {r.spec.name: 0 for r in self.replicas}
@@ -303,13 +622,42 @@ class ServeFleet:
             counts[name] += 1
         return counts
 
+    def robustness_counts(self) -> dict[str, dict]:
+        """Per-region robustness counters (FleetReport
+        ``detail["robustness"]``): timeouts come from each engine's
+        stats; the rest accumulate in the chaos-plane paths above.
+        ``requests_lost`` counts requests neither completed, pending,
+        nor backlogged — structurally zero (recovery never drops), and
+        CI-gated at zero."""
+        open_rids = set(self._requests) - set(self._done)
+        for rid in list(open_rids):
+            if rid in self._backlog:
+                open_rids.discard(rid)
+                continue
+            for (ri, lrid) in self._placements.get(rid, []):
+                if any(p.rid == lrid
+                       for p in self.replicas[ri].engine._pending):
+                    open_rids.discard(rid)
+                    break
+        out = {}
+        for r in self.replicas:
+            c = dict(self.robustness[r.spec.name])
+            c["timeouts"] = int(r.engine.stats.timeouts)
+            out[r.spec.name] = c
+        for rid in open_rids:       # terminally lost (should never happen)
+            src = self._evicted_from.get(rid)
+            name = src if src in out else self.replicas[0].spec.name
+            out[name]["requests_lost"] += 1
+        return out
+
     # -- rollup --------------------------------------------------------------
     def fleet_report(self, *, slo_attainment: float | None = None,
                      detail: dict | None = None) -> FleetReport:
         """Roll every region meter's cumulative EnergyReport into one
         ``ese-fleet-report/v1`` record."""
         extra = {"dispatch_counts": self.dispatch_counts(),
-                 "intervals": self.interval + 1}
+                 "intervals": self.interval + 1,
+                 "robustness": self.robustness_counts()}
         extra.update(detail or {})
         return fleet_rollup(
             {r.spec.name: r.meter.report() for r in self.replicas},

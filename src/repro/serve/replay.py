@@ -41,18 +41,20 @@ requests still unserved then (possible only under ``pause_policy=
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.ese.meter import SustainabilityMeter
-from repro.core.ese.records import FleetReport, fleet_rollup
+from repro.core.ese.records import ROBUSTNESS_KEYS, FleetReport, fleet_rollup
 from repro.core.power import traces
 from repro.core.power.scheduler import (
     Action,
     CarbonAwareScheduler,
     SchedulerConfig,
 )
+from repro.serve.faults import ChaosSpec, FaultPlane
 from repro.serve.fleet import CURSOR_STRIDE, RegionSpec, ServeFleet
 from repro.serve.router import RegionSnapshot, Router
 
@@ -125,13 +127,25 @@ def _slo(latency: np.ndarray, slo_s: float) -> float:
 def replay_engine(fleet: ServeFleet, cfg: ReplayConfig) -> ReplayResult:
     """Replay the trace through the real serve engines: per interval,
     route that interval's arrivals, then drain every region in batched
-    super-bucket waves at its scheduler-derated width."""
+    super-bucket waves at its scheduler-derated width.
+
+    Chaos mode rides the fleet: build the fleet with
+    ``ServeFleet(chaos=ChaosSpec(...))`` and the same replay injects
+    faults on the interval clock, recovers every lost request, and
+    reports the recovery work under each region's
+    ``detail["recovery"]`` — outputs stay bit-identical to the
+    fault-free replay (greedy decode; CI chaos smoke gates this).
+    Requests carry ``cfg.slo_s`` as their hedge deadline in chaos
+    mode.  One caveat: past the trace end the interval pins at the
+    last trace index, so a fault scheduled there would never clear —
+    ``ChaosSpec.generate`` keeps faults clear of the tail."""
     n_int = min(len(r.supply) for r in fleet.replicas)
     arr = arrival_times(cfg, n_int)
     plens, mnews = request_shapes(cfg)
     prompt_rng = np.random.default_rng(cfg.seed + 2)
     vocab = fleet.mcfg.vocab_size
     n = cfg.n_requests
+    chaos = fleet.chaos is not None
     rid_of = np.full(n, -1, np.int64)
     completion = np.full(n, np.inf)
     first = np.searchsorted(arr, np.arange(n_int) * INTERVAL_S)
@@ -145,7 +159,9 @@ def replay_engine(fleet: ServeFleet, cfg: ReplayConfig) -> ReplayResult:
         while nxt < min(end, n):
             prompt = prompt_rng.integers(
                 1, vocab, plens[nxt]).astype(np.int32)
-            rid_of[nxt] = fleet.submit(prompt, max_new_tokens=int(mnews[nxt]))
+            rid_of[nxt] = fleet.submit(
+                prompt, max_new_tokens=int(mnews[nxt]),
+                deadline_s=cfg.slo_s if chaos else None)
             nxt += 1
         fleet.run()
         done = fleet.results()
@@ -162,7 +178,7 @@ def replay_engine(fleet: ServeFleet, cfg: ReplayConfig) -> ReplayResult:
     outputs = fleet.results()
     report = fleet.fleet_report(
         slo_attainment=slo,
-        detail={"mode": "engine", "n_requests": n,
+        detail={"mode": "engine", "n_requests": n, "chaos": chaos,
                 "mean_latency_s": float(
                     latency[np.isfinite(latency)].mean())
                 if np.isfinite(latency).any() else float("inf")})
@@ -203,9 +219,18 @@ class _SimRegion:
         self.queue: list[tuple[float, int, int]] = []  # (arrival, idx, toks)
         self.clock = 0.0                               # server-busy-until time
         self.tokens = 0
+        # chaos plane (serve/faults.py): None fault-free; 0.0 under a
+        # blackout, the brownout severity otherwise
+        self.fault_headroom_scale: float | None = None
 
     def _at(self, series, interval: int) -> float:
         return float(series[min(interval, len(series) - 1)])
+
+    def headroom(self, interval: int) -> float:
+        h = self._at(self.supply, interval)
+        if self.fault_headroom_scale is not None:
+            h *= self.fault_headroom_scale
+        return h
 
     def snapshot(self, interval: int) -> RegionSnapshot:
         return RegionSnapshot(
@@ -213,15 +238,17 @@ class _SimRegion:
             carbon_intensity=self._at(self.intensity, interval),
             queue_depth=len(self.queue),
             tokens_per_s=self.tokens_per_s,
-            headroom=self._at(self.supply, interval),
+            headroom=self.headroom(interval),
         )
 
     def rate(self, interval: int) -> float:
+        if self.fault_headroom_scale == 0.0:
+            return 0.0              # blackout: a dark region serves nothing
         f = None
         if self.forecast_quantiles is not None:
             f = {float(q): self._at(v, interval)
                  for q, v in self.forecast_quantiles.items()}
-        d = self.scheduler.decide(self._at(self.supply, interval), f)
+        d = self.scheduler.decide(self.headroom(interval), f)
         if d.action is Action.PAUSE:
             if self.pause_policy == "hold":
                 return 0.0
@@ -279,12 +306,23 @@ def replay_model(regions: list[RegionSpec], cfg: ReplayConfig, *,
                  use_forecast: bool = False,
                  base_max_batch: int = 8,
                  calibration: dict[str, float] | None = None,
-                 router: Router | None = None) -> ReplayResult:
+                 router: Router | None = None,
+                 chaos: ChaosSpec | None = None) -> ReplayResult:
     """Engine-free replay for six-figure request counts: identical
     arrivals, routing and per-interval carbon booking, with decode
     replaced by the calibrated service model.  ``calibration`` maps
     region names to measured tokens/s (``calibrate_tokens_per_s``);
-    regions absent from it fall back to their spec hint."""
+    regions absent from it fall back to their spec hint.
+
+    ``chaos`` replays a fault schedule through the service model:
+    blackouts zero a region's rate and migrate its queue to healthy
+    regions, brownouts collapse its headroom through the same
+    scheduler derate, crashes dump the queue onto survivors, and the
+    router's health tracker excludes dark regions (``flash_storm`` is
+    engine-only — the model has no flash tier — and telemetry faults
+    freeze router snapshots).  No request is ever dropped; migrations
+    book to the destination meter's recovery ledger and the per-region
+    counters land in ``detail["robustness"]``."""
     if calibration:
         known = {s.name for s in regions}
         stray = sorted(set(calibration) - known)
@@ -298,6 +336,7 @@ def replay_model(regions: list[RegionSpec], cfg: ReplayConfig, *,
                        tokens_per_s=(calibration or {}).get(s.name))
             for s in regions]
     rtr = router or Router(policy, seed=seed)
+    plane = FaultPlane(chaos) if chaos is not None else None
     n_int = min(len(s.supply) for s in sims)
     arr = arrival_times(cfg, n_int)
     _, mnews = request_shapes(cfg)
@@ -305,35 +344,97 @@ def replay_model(regions: list[RegionSpec], cfg: ReplayConfig, *,
     completion = np.full(n, np.inf)
     first = np.searchsorted(arr, np.arange(n_int) * INTERVAL_S)
     counts = {s.spec.name: 0 for s in sims}
+    rob = {s.spec.name: {k: 0 for k in ROBUSTNESS_KEYS} for s in sims}
+    tele_age = [0] * len(sims)
+    frozen: list[RegionSnapshot | None] = [None] * len(sims)
+    backlog: list[tuple[float, int, int]] = []   # undispatchable arrivals
     nxt = 0
+
+    def snap_of(j: int, iv: int) -> RegionSnapshot:
+        if frozen[j] is not None:
+            return dataclasses.replace(frozen[j], age=tele_age[j])
+        return sims[j].snapshot(iv)
+
+    def route(entry, iv) -> int | None:
+        snaps = [snap_of(j, iv) for j in range(len(sims))]
+        ri = rtr.pick(snaps)
+        if ri == Router.NO_CAPACITY:
+            return None
+        sims[ri].queue.append(entry)
+        counts[sims[ri].spec.name] += 1
+        return ri
 
     i = 0
     while i < n_int + MAX_DRAIN_EXTRA:
         iv = min(i, n_int - 1)
+        if plane is not None:
+            for j, s in enumerate(sims):
+                name = s.spec.name
+                bo = plane.blackout(name, iv)
+                br = plane.brownout(name, iv)
+                s.fault_headroom_scale = 0.0 if bo else br
+                healthy = not bo
+                dumped: list[tuple[float, int, int]] = []
+                for f in plane.one_shots(name, iv):
+                    if f.kind == "replica_crash":
+                        healthy = False
+                        dumped, s.queue = s.queue, []
+                rtr.observe(name, healthy=healthy)
+                tel = plane.telemetry(name, iv)
+                if tel is None:
+                    tele_age[j], frozen[j] = 0, None
+                else:
+                    if frozen[j] is None:
+                        frozen[j] = s.snapshot(iv)
+                    tele_age[j] = (rtr.max_snapshot_age + 1 if tel >= 1.0
+                                   else tele_age[j] + 1)
+                if bo and s.queue:   # dark region: migrate the queue
+                    dumped, s.queue = dumped + s.queue, []
+                for entry in dumped:
+                    dst = route(entry, iv)
+                    if dst is not None:
+                        rob[name]["migrations"] += 1
+                        # destination books the re-dispatch work
+                        sims[dst].meter.recovery(migrations=1)
+                    else:
+                        backlog.append(entry)
+            retained: list[tuple[float, int, int]] = []
+            for entry in backlog:
+                dst = route(entry, iv)
+                if dst is not None:
+                    rob[sims[dst].spec.name]["retries"] += 1
+                    sims[dst].meter.recovery(retries=1)
+                else:
+                    retained.append(entry)
+            backlog = retained
         end = first[i + 1] if i + 1 < n_int else n
         while nxt < min(end, n):
-            snaps = [s.snapshot(iv) for s in sims]
-            ri = rtr.pick(snaps)
-            sims[ri].queue.append((float(arr[nxt]), nxt, int(mnews[nxt])))
-            counts[sims[ri].spec.name] += 1
+            entry = (float(arr[nxt]), nxt, int(mnews[nxt]))
+            if route(entry, iv) is None:
+                backlog.append(entry)
             nxt += 1
         for s in sims:
             s.drain(iv, completion)
         i += 1
-        if nxt >= n and not any(s.queue for s in sims):
+        if nxt >= n and not backlog \
+                and not any(s.queue for s in sims):
             break
 
     latency = completion - arr
     slo = _slo(latency, cfg.slo_s)
     tokens = sum(s.tokens for s in sims)
+    detail = {"mode": "model", "n_requests": n,
+              "dispatch_counts": counts,
+              "mean_latency_s": float(latency[np.isfinite(latency)].mean())
+              if np.isfinite(latency).any() else float("inf")}
+    if plane is not None:
+        detail["chaos"] = True
+        detail["robustness"] = rob
     report = fleet_rollup(
         {s.spec.name: s.meter.report() for s in sims},
         policy=rtr.policy, requests=n, tokens=tokens,
         slo_attainment=slo,
-        detail={"mode": "model", "n_requests": n,
-                "dispatch_counts": counts,
-                "mean_latency_s": float(latency[np.isfinite(latency)].mean())
-                if np.isfinite(latency).any() else float("inf")})
+        detail=detail)
     return ReplayResult(report=report, latency_s=latency,
                         slo_attainment=slo,
                         gco2_per_token=report.gco2_per_token(),

@@ -30,6 +30,31 @@ from ``np.random.default_rng(seed)``, so a fixed seed yields an
 identical dispatch trace (locked by tests/test_fleet.py), while a
 spread of seeds avoids thundering-herd pile-on when many routers see
 identical snapshots.
+
+Health tracking (the chaos plane, serve/faults.py):
+
+The fleet reports each region healthy/unhealthy once per interval via
+``observe``; the router excludes from dispatch any region that is
+
+  - **dead** — last observation unhealthy (blackout, crash); a dead
+    region re-admits through **probation**: it must report healthy for
+    ``probation_intervals`` consecutive observations before dispatch
+    resumes (a region flapping at the blackout edge doesn't get a
+    request queue dumped on it the instant the sun comes back);
+  - **stale** — its snapshot's ``age`` (intervals since last fresh
+    telemetry) exceeds ``max_snapshot_age``; a router acting on frozen
+    queue depths would happily pile onto a region it can't see.
+
+If every region is excluded, ``pick`` returns ``Router.NO_CAPACITY``
+(-1) — the fleet turns that into queueing/backpressure, never an
+exception.  With no faults (every region healthy, age 0) the dispatch
+trace is bit-identical to the pre-health router.
+
+``RetrySchedule`` supplies the recovery timing: deterministic seeded
+exponential backoff (per request, capped, non-decreasing before
+jitter) and deadline-aware hedge offsets (a hedge never fires at or
+after the request's deadline) — property-locked by
+tests/test_chaos.py.
 """
 from __future__ import annotations
 
@@ -44,12 +69,17 @@ _EPS = 1e-9
 
 @dataclass(frozen=True)
 class RegionSnapshot:
-    """One region's router-visible state at a dispatch instant."""
+    """One region's router-visible state at a dispatch instant.
+
+    ``age`` counts intervals since the telemetry was fresh: 0 means
+    live, >0 means the fleet is re-serving a frozen snapshot because
+    the region's telemetry stalled (chaos ``telemetry`` fault)."""
     name: str
     carbon_intensity: float      # kg/kWh this interval
     queue_depth: int             # requests pending at the replica
     tokens_per_s: float          # measured decode rate (EWMA)
     headroom: float              # supply_frac available this interval
+    age: int = 0                 # intervals since last fresh telemetry
 
     @property
     def est_latency_s(self) -> float:
@@ -60,10 +90,75 @@ class RegionSnapshot:
         return (self.queue_depth + 1) / max(self.tokens_per_s, _EPS)
 
 
+@dataclass(frozen=True)
+class BackoffConfig:
+    """Retry/hedge timing knobs (seconds of simulated time)."""
+    base_s: float = 30.0         # first retry delay
+    factor: float = 2.0          # exponential growth per attempt
+    cap_s: float = 600.0         # hard ceiling, jitter included
+    jitter_frac: float = 0.1     # ± fraction of the raw delay
+    max_retries: int = 5
+    hedge_frac: float = 0.5      # hedge at this fraction of the deadline
+
+    def __post_init__(self):
+        if self.base_s <= 0 or self.cap_s <= 0:
+            raise ValueError("BackoffConfig delays must be positive")
+        if self.factor < 1.0:
+            raise ValueError("BackoffConfig.factor must be >= 1")
+        if not 0.0 <= self.jitter_frac < 1.0:
+            raise ValueError("BackoffConfig.jitter_frac must be in [0, 1)")
+        if not 0.0 < self.hedge_frac < 1.0:
+            raise ValueError("BackoffConfig.hedge_frac must be in (0, 1)")
+
+
+class RetrySchedule:
+    """Deterministic per-request retry and hedge timing.
+
+    All randomness is keyed by ``(seed, rid, attempt)`` so a replay
+    produces the identical schedule regardless of when it is asked."""
+
+    def __init__(self, cfg: BackoffConfig | None = None, *, seed: int = 0):
+        self.cfg = cfg or BackoffConfig()
+        self.seed = seed
+
+    def raw_backoff_s(self, attempt: int) -> float:
+        """Pre-jitter delay before retry ``attempt`` (0-based):
+        exponential, clamped at the cap — non-decreasing in attempt."""
+        c = self.cfg
+        return min(c.cap_s, c.base_s * c.factor ** attempt)
+
+    def backoff_s(self, rid: int, attempt: int) -> float:
+        """Jittered delay before retry ``attempt`` of request ``rid``.
+        Always positive and never above ``cap_s``."""
+        raw = self.raw_backoff_s(attempt)
+        rng = np.random.default_rng(
+            [self.seed & 0x7FFFFFFF, rid & 0x7FFFFFFF, attempt])
+        jitter = 1.0 + self.cfg.jitter_frac * (2.0 * rng.random() - 1.0)
+        return min(self.cfg.cap_s, raw * jitter)
+
+    def hedge_delay_s(self, rid: int, deadline_s: float) -> float | None:
+        """Delay after submission at which a hedged duplicate may be
+        dispatched, strictly before the request's deadline — or None
+        when the deadline leaves no room to hedge."""
+        if deadline_s <= 0.0 or not np.isfinite(deadline_s):
+            return None
+        rng = np.random.default_rng(
+            [self.seed & 0x7FFFFFFF, rid & 0x7FFFFFFF, 0x4ED6E])
+        frac = self.cfg.hedge_frac * (1.0 + self.cfg.jitter_frac
+                                      * (2.0 * rng.random() - 1.0))
+        # hedge_frac in (0,1) and jitter_frac < 1 keep frac in (0, 1),
+        # so the hedge always lands strictly inside the deadline
+        delay = deadline_s * min(frac, 1.0 - _EPS)
+        return float(delay)
+
+
 class Router:
+    NO_CAPACITY = -1             # pick(): every region excluded/absent
+
     def __init__(self, policy: str = "carbon_latency", *, seed: int = 0,
                  w_carbon: float = 1.0, w_latency: float = 1.0,
-                 w_headroom: float = 1.0):
+                 w_headroom: float = 1.0, max_snapshot_age: int = 2,
+                 probation_intervals: int = 2):
         if policy not in POLICIES:
             raise ValueError(
                 f"unknown router policy {policy!r}; valid: {POLICIES}")
@@ -72,8 +167,43 @@ class Router:
         self.w_latency = w_latency
         self.w_headroom = w_headroom
         self.seed = seed
+        self.max_snapshot_age = max_snapshot_age
+        self.probation_intervals = probation_intervals
         self._rng = np.random.default_rng(seed)
         self._rr = 0
+        # health: name -> (state, consecutive healthy observations);
+        # unobserved regions are trusted (fault-free fleets never call
+        # observe, and their dispatch trace must not change)
+        self._health: dict[str, tuple[str, int]] = {}
+
+    # -- health state machine ------------------------------------------------
+    def observe(self, name: str, *, healthy: bool) -> None:
+        """One per-interval health report for a region.
+
+        ok --unhealthy--> dead --healthy×probation_intervals--> ok
+        (re-admission passes through a 'probation' state; an unhealthy
+        report during probation resets it to dead)."""
+        state, streak = self._health.get(name, ("ok", 0))
+        if not healthy:
+            self._health[name] = ("dead", 0)
+            return
+        if state == "ok":
+            self._health[name] = ("ok", 0)
+            return
+        streak += 1
+        if streak >= self.probation_intervals:
+            self._health[name] = ("ok", 0)
+        else:
+            self._health[name] = ("probation", streak)
+
+    def health_state(self, name: str) -> str:
+        return self._health.get(name, ("ok", 0))[0]
+
+    def eligible(self, snap: RegionSnapshot) -> bool:
+        """Dispatchable: not dead, not in probation, telemetry fresh."""
+        if self.health_state(snap.name) != "ok":
+            return False
+        return snap.age <= self.max_snapshot_age
 
     def score(self, snap: RegionSnapshot) -> float:
         """Lower is better.  round_robin is stateful and has no score."""
@@ -87,18 +217,24 @@ class Router:
                 / max(snap.headroom, _EPS) ** self.w_headroom)
 
     def pick(self, snaps: list[RegionSnapshot]) -> int:
-        """Index of the region to dispatch to."""
+        """Index into ``snaps`` of the region to dispatch to, or
+        ``Router.NO_CAPACITY`` when no region is dispatchable (empty
+        list, or health/staleness excluded them all) — the caller
+        queues or sheds; nothing here raises for lack of capacity."""
         if not snaps:
-            raise ValueError("router.pick needs at least one region")
+            return Router.NO_CAPACITY
+        idx = [i for i, s in enumerate(snaps) if self.eligible(s)]
+        if not idx:
+            return Router.NO_CAPACITY
         if self.policy == "round_robin":
-            i = self._rr % len(snaps)
+            i = idx[self._rr % len(idx)]
             self._rr += 1
             return i
-        scores = np.asarray([self.score(s) for s in snaps], float)
+        scores = np.asarray([self.score(snaps[i]) for i in idx], float)
         best = scores.min()
         # relative tolerance so float noise in a genuinely tied product
         # doesn't silently pin everything to region 0
         ties = np.flatnonzero(scores - best <= _EPS * max(abs(best), 1.0))
         if len(ties) == 1:
-            return int(ties[0])
-        return int(ties[self._rng.integers(len(ties))])
+            return idx[int(ties[0])]
+        return idx[int(ties[self._rng.integers(len(ties))])]

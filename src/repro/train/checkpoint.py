@@ -28,9 +28,14 @@ Modes:
            kernels/frac_pack/frac_quant_pack.py; the layout itself is
            documented in frac_carry_pack.py).
 
-Fault tolerance: integrity digests (SHA3-256 — same construction as the
-Pallas kernel, hashlib fast path on host) are verified on restore;
-partial writes are invisible (tmp-dir + rename); delta snapshots skip
+Fault tolerance: every leaf carries two SHA3-256 digests (same
+construction as the Pallas kernel, hashlib fast path on host) — one
+over the decoded array (exact encodings) and one over the on-disk
+payload bytes (ALL encodings, frac included), checked before decode so
+a truncated or bit-flipped file raises a ValueError naming the corrupt
+file instead of decoding to silent garbage; partial writes are
+invisible twice over (per-file ``.part`` + rename inside the tmp dir,
+then tmp-dir + rename for the whole step); delta snapshots skip
 unchanged leaves.  Resharding: restore() takes a target mesh/shardings,
 so a job can restart on a different topology (elastic scaling).
 """
@@ -209,14 +214,26 @@ class CheckpointManager:
             entry.update({k: v for k, v in enc.items() if k != "payload"})
             fname = hashlib.sha3_256(path.encode()).hexdigest()[:24] + ".bin"
             entry["file"] = fname
-            with open(os.path.join(tmp, fname), "wb") as f:
+            # payload digest covers the on-disk bytes for EVERY encoding
+            # (the array digest can't check frac payloads — quantization
+            # is lossy); restore verifies it before decoding, so a
+            # truncated or flipped file fails loudly, never silently
+            entry["payload_sha3"] = hashlib.sha3_256(
+                enc["payload"]).hexdigest()
+            # per-file temp + rename: a crash mid-write leaves no
+            # half-written .bin even inside the (also atomic) tmp dir
+            fpath = os.path.join(tmp, fname)
+            with open(fpath + ".part", "wb") as f:
                 f.write(enc["payload"])
+            os.replace(fpath + ".part", fpath)
             total += len(enc["payload"])
             manifest["leaves"][path] = entry
             self._last_digests[path] = digest
 
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        mpath = os.path.join(tmp, "manifest.json")
+        with open(mpath + ".part", "w") as f:
             json.dump(manifest, f)
+        os.replace(mpath + ".part", mpath)
         shutil.rmtree(final, ignore_errors=True)
         os.replace(tmp, final)
         self._gc()
@@ -271,8 +288,20 @@ class CheckpointManager:
                 if entry2.get("enc") == "unchanged":
                     raise ValueError(f"chained delta for {path!r}")
                 entry, src_dir = entry2, base_dir
-            with open(os.path.join(src_dir, entry["file"]), "rb") as f:
+            fpath = os.path.join(src_dir, entry["file"])
+            with open(fpath, "rb") as f:
                 payload = f.read()
+            if verify and "payload_sha3" in entry:
+                # checked BEFORE decode, for every encoding: a corrupt
+                # frac payload would otherwise dequantize to silent
+                # garbage, and a truncated exact payload would throw an
+                # opaque decompress error instead of naming the file
+                got = hashlib.sha3_256(payload).hexdigest()
+                if got != entry["payload_sha3"]:
+                    raise ValueError(
+                        f"checkpoint payload corrupt: integrity check "
+                        f"failed for leaf {path!r} in file {fpath!r} "
+                        f"({len(payload)} bytes on disk)")
             arr = self._decode_leaf(entry, payload)
             if verify and not entry["enc"].startswith("frac"):
                 got = hashlib.sha3_256(arr.tobytes()).hexdigest()

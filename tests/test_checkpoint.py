@@ -41,8 +41,52 @@ def test_integrity_tamper_detected(tmp_path):
     blob = bytearray(open(fpath, "rb").read())
     blob[0] ^= 0xFF
     open(fpath, "wb").write(bytes(blob))
-    with pytest.raises(IOError, match="integrity"):
+    # the payload digest fires before decode and names the corrupt file
+    with pytest.raises(ValueError, match="integrity"):
         m.restore(t)
+
+
+def test_truncated_checkpoint_fails_loud(tmp_path):
+    """A checkpoint cut off mid-file (torn write, full disk) must raise
+    a ValueError naming the corrupt file — never decode to garbage or
+    throw an opaque shape/decompress error."""
+    m = CheckpointManager(str(tmp_path), mode="exact", use_zstd=False)
+    t = _tree()
+    res = m.save(1, t)
+    manifest = json.load(open(os.path.join(res.path, "manifest.json")))
+    entry = next(e for e in manifest["leaves"].values() if e["enc"] == "raw")
+    fpath = os.path.join(res.path, entry["file"])
+    blob = open(fpath, "rb").read()
+    open(fpath, "wb").write(blob[: len(blob) // 2])   # truncate mid-file
+    with pytest.raises(ValueError) as ei:
+        m.restore(t)
+    msg = str(ei.value)
+    assert "corrupt" in msg and entry["file"] in msg
+
+
+def test_truncated_frac_checkpoint_fails_loud(tmp_path):
+    """frac payloads would dequantize truncated bytes to silent garbage
+    without the pre-decode digest; lock the loud failure there too."""
+    m = CheckpointManager(str(tmp_path), mode="frac8")
+    t = _tree()
+    res = m.save(1, t)
+    manifest = json.load(open(os.path.join(res.path, "manifest.json")))
+    entry = next(e for e in manifest["leaves"].values()
+                 if e["enc"].startswith("frac"))
+    fpath = os.path.join(res.path, entry["file"])
+    blob = open(fpath, "rb").read()
+    open(fpath, "wb").write(blob[:-7])
+    with pytest.raises(ValueError, match="corrupt"):
+        m.restore(t)
+
+
+def test_save_leaves_no_part_files(tmp_path):
+    """Atomic writes: payloads and manifests land via temp+rename, so a
+    completed save never leaves ``.part`` droppings behind."""
+    m = CheckpointManager(str(tmp_path), mode="exact")
+    m.save(1, _tree())
+    for root, _dirs, files in os.walk(tmp_path):
+        assert not any(f.endswith(".part") for f in files), (root, files)
 
 
 def test_frac8_mode_error_bounded(tmp_path):

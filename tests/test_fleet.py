@@ -74,11 +74,29 @@ def test_router_round_robin_cycles():
     assert [r.pick(snaps) for _ in range(6)] == [0, 1, 2, 0, 1, 2]
 
 
-def test_router_rejects_unknown_policy_and_empty_snaps():
+def test_router_rejects_unknown_policy():
     with pytest.raises(ValueError):
         Router("random")
-    with pytest.raises(ValueError):
-        Router("greenest").pick([])
+
+
+def test_router_empty_or_fully_excluded_returns_no_capacity():
+    """pick() on no dispatchable region is an explicit no-capacity
+    outcome the fleet turns into queueing/backpressure — never an
+    exception (an all-regions-down interval must not crash dispatch)."""
+    r = Router("greenest")
+    assert r.pick([]) == Router.NO_CAPACITY
+    # a dead region is excluded; with every region dead, no capacity
+    r.observe("a", healthy=False)
+    assert r.pick([_snap("a", 0.1)]) == Router.NO_CAPACITY
+    # stale telemetry excludes too
+    r2 = Router("greenest", max_snapshot_age=2)
+    stale = RegionSnapshot(name="b", carbon_intensity=0.1, queue_depth=0,
+                           tokens_per_s=100.0, headroom=1.0, age=3)
+    assert r2.pick([stale]) == Router.NO_CAPACITY
+    # round_robin honors exclusion the same way
+    rr = Router("round_robin")
+    rr.observe("a", healthy=False)
+    assert rr.pick([_snap("a", 0.1)]) == Router.NO_CAPACITY
 
 
 def test_router_tie_break_deterministic_per_seed():
