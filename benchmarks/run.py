@@ -10,7 +10,9 @@ Prints ``name,value,derived`` CSV rows.  Mapping to the paper:
   bench_roofline         EXPERIMENTS §Roofline table (from the dry-run)
   bench_ese_estimates    Fig 4(a) estimator pipeline end-to-end
   bench_serve            serving decode tokens/s + J/token (device-
-                         resident while_loop vs seed per-token sync)
+                         resident while_loop vs seed per-token sync;
+                         paged long-context decode kernel-vs-gather
+                         tokens/s + attention-transient bytes)
   bench_fleet            multi-region fleet replay: router-policy
                          SLO-vs-gCO2/token Pareto + schema/identity gates
   bench_reconfig         §II-A AMOEBA reconfiguration: per-interval

@@ -1,0 +1,5 @@
+"""Fused paged-attention decode (Pallas page-walk kernel + jnp fallback).
+
+Public surface is ``ops.paged_attention`` — see ops.py for the mode
+contract and paged_decode.py for the kernel itself.
+"""

@@ -1,0 +1,225 @@
+"""Dispatch point for fused paged-attention decode.
+
+``transformer._attn_decode_paged`` (behind the engine's
+``paged_kernel=True`` flag) and the serve benchmarks call
+``paged_attention`` here; backend selection lives in exactly one place:
+
+  mode="pallas"  compiled Pallas page-walk kernel (paged_decode.py) —
+                 per-lane trip count, TPU only, guarded by an eager
+                 probe exactly like frac_pack's.
+  mode="pallas_interpret"
+                 same kernel through the Pallas interpreter (tests /
+                 CPU debugging; slow but bit-comparable to "jnp").
+  mode="jnp"     vectorized page walk: a ``fori_loop`` over page
+                 columns bounded by ``max(pos) // ps + 1`` across the
+                 bucket (a traced bound — XLA lowers it to a while
+                 loop), one page column per step, identical per-page
+                 online-softmax math to the kernel.  The transient per
+                 step is ``(B, ps, K, hd)`` keys/values plus a
+                 ``(B, K, G, ps)`` score tile — never the
+                 ``(B, max_pages * ps, K, hd)`` gather.  The fast
+                 fallback wherever Mosaic isn't available.
+  mode=None      auto: "pallas" on TPU (probe permitting), else "jnp".
+
+``REPRO_PAGED_ATTN_MODE`` overrides the auto choice for all consumers —
+the serve engine doesn't expose the mode parameter, so this is the
+operational escape hatch (same contract as ``REPRO_FRAC_MODE``).
+
+Walked-but-masked pages are EXACT no-ops in the accumulator
+(``r = exp(0) = 1``, ``p = exp(NEG_INF - m) = 0``), which is what lets
+the jnp walk use one shared bucket-wide page bound while the Pallas
+kernel walks per-lane counts: both produce the same per-page update
+sequence for every lane.  The gather + ``common.attention`` oracle
+stays the ground truth for tests (see paged_decode.py docstring for
+why oracle equality is token-level, not float-bit-level).
+
+``gather_transient_bytes`` / ``kernel_transient_bytes`` model the peak
+per-layer attention transient of each read path; the serve engine
+stamps them into ``ServeStats.attn_transient_peak`` and the CI bench
+gate asserts kernel < gather on the skewed long-context fixture.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attn import paged_decode
+
+NEG_INF = paged_decode.NEG_INF
+VALID_MODES = ("pallas", "pallas_interpret", "jnp")
+ENV_VAR = "REPRO_PAGED_ATTN_MODE"
+
+
+def default_mode() -> str:
+    """Auto backend selection (env override, then platform)."""
+    forced = os.environ.get(ENV_VAR)
+    if forced:
+        if forced not in VALID_MODES:
+            raise ValueError(
+                f"{ENV_VAR}={forced!r}: expected one of "
+                + " | ".join(VALID_MODES))
+        return forced
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    return "jnp"
+
+
+_pallas_ok_cache: dict[str, bool] = {}
+
+
+def _pallas_ok() -> bool:
+    """Validate the compiled kernel once per process with a tiny
+    concrete probe — eager, so a Mosaic lowering failure surfaces here
+    rather than inside the serve loop's outer jit (same rationale as
+    frac_pack.ops._pallas_ok)."""
+    if "ok" not in _pallas_ok_cache:
+        try:
+            q = jnp.zeros((2, 4, 8), jnp.float32)
+            pool = jnp.zeros((4, 2, 2, 8), jnp.float32)
+            pt = jnp.array([[1, 2], [3, -1]], jnp.int32)
+            pos = jnp.array([3, 1], jnp.int32)
+            out = paged_decode.paged_attention(q, pool, pool, pt, pos,
+                                               interpret=False)
+            jax.block_until_ready(out)
+            _pallas_ok_cache["ok"] = True
+        except Exception as e:
+            import warnings
+
+            warnings.warn(
+                f"paged_attn Pallas kernel probe failed "
+                f"({type(e).__name__}: {e}); using the jnp page walk "
+                f"this process. Set {ENV_VAR}=jnp to silence.",
+                RuntimeWarning)
+            _pallas_ok_cache["ok"] = False
+    return _pallas_ok_cache["ok"]
+
+
+def _resolve_mode(mode: str | None) -> str:
+    """Explicit "pallas" fails loudly on a failing probe; only the
+    auto / env-var preference falls back to jnp."""
+    explicit = mode is not None
+    if explicit and mode not in VALID_MODES:
+        raise ValueError(
+            f"mode={mode!r}: expected one of " + " | ".join(VALID_MODES))
+    if not explicit:
+        mode = default_mode()
+    if mode == "pallas" and not _pallas_ok():
+        if explicit:
+            raise RuntimeError(
+                "mode='pallas' requested but the kernel probe failed "
+                "on this backend; use 'pallas_interpret' or 'jnp'")
+        mode = "jnp"
+    return mode
+
+
+def _paged_attention_jnp(q, pk, pv, page_table, pos, chunk):
+    """Vectorized page walk — per-chunk math mirrors the kernel.
+    ``page_table`` width is a multiple of ``chunk`` (padded by the
+    dispatcher)."""
+    B, H, hd = q.shape
+    ps, K = pk.shape[1], pk.shape[2]
+    G = H // K
+    max_pages = page_table.shape[1]
+    qg = (q * (hd ** -0.5)).reshape(B, K, G, hd)
+    pos = pos.astype(jnp.int32)
+    n_pages = jnp.minimum(jnp.max(pos) // ps + 1, max_pages)
+    n_chunks = (n_pages + chunk - 1) // chunk
+    slot = jnp.arange(chunk * ps)                # slot offset in chunk
+
+    def body(t, carry):
+        m, l, acc = carry
+        first = t * chunk
+        entries = jax.lax.dynamic_slice_in_dim(
+            page_table, first, chunk, axis=1)           # (B, chunk)
+        pids = jnp.maximum(entries, 0)
+        k = pk[pids].reshape(B, chunk * ps, K, hd)
+        v = pv[pids].reshape(B, chunk * ps, K, hd)
+        valid = ((first * ps + slot)[None, :] <= pos[:, None]) \
+            & (entries[:, slot // ps] > 0)              # (B, chunk*ps)
+        s = jnp.einsum("bkgh,bskh->bkgs", qg, k,
+                       preferred_element_type=jnp.float32)
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        v = jnp.where(valid[:, :, None, None], v, jnp.zeros((), v.dtype))
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        r = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * r + p.sum(axis=-1)
+        acc = acc * r[..., None] + jnp.einsum(
+            "bkgs,bskh->bkgh", p, v.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        return m_new, l, acc
+
+    m0 = jnp.full((B, K, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G), jnp.float32)
+    a0 = jnp.zeros((B, K, G, hd), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_chunks, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1.0)[..., None]
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+PAGES_PER_CHUNK = 4      # pages folded per accumulator step: amortizes
+                         # the loop-dispatch overhead of the walk while
+                         # keeping the transient a small constant
+                         # multiple of one page (never the table width)
+
+
+def paged_attention(q: jax.Array,           # (B, H, hd)
+                    pk: jax.Array,          # (P, ps, K, hd)
+                    pv: jax.Array,
+                    page_table: jax.Array,  # (B, max_pages)
+                    pos: jax.Array,         # (B,)
+                    *, mode: str | None = None,
+                    chunk: int = PAGES_PER_CHUNK) -> jax.Array:
+    """Fused paged GQA decode attention; (B, H, hd) in q.dtype.
+
+    Any chunk size produces bit-identical output for a given mode
+    (walked-but-masked pages are exact accumulator no-ops, and chunk
+    boundaries only group the SAME per-page updates), and "jnp" ==
+    "pallas"/"pallas_interpret" bit-for-bit at equal chunk."""
+    mode = _resolve_mode(mode)
+    max_pages = page_table.shape[1]
+    chunk = max(1, min(chunk, max_pages))
+    if max_pages % chunk:
+        # pad with unallocated columns so chunks tile the table; -1
+        # entries are masked to exact no-ops in the walk
+        pad = chunk - max_pages % chunk
+        page_table = jnp.pad(page_table, ((0, 0), (0, pad)),
+                             constant_values=-1)
+    if mode == "jnp":
+        return _paged_attention_jnp(q, pk, pv, page_table, pos, chunk)
+    return paged_decode.paged_attention(
+        q, pk, pv, page_table, pos, chunk=chunk,
+        interpret=(mode == "pallas_interpret"))
+
+
+# ---------------------------------------------------------------------------
+# Peak attention-transient model (bytes per layer per decode step)
+# ---------------------------------------------------------------------------
+
+def gather_transient_bytes(B: int, max_pages: int, page_size: int,
+                           K: int, G: int, hd: int,
+                           kv_itemsize: int) -> int:
+    """gather_pages read path: the full (B, max_pages*ps, K, hd) k AND
+    v gathers coexist with the fp32 (B, K, G, 1, max_pages*ps) score
+    block — every lane pays the bucket-max table width."""
+    slots = max_pages * page_size
+    kv = 2 * B * slots * K * hd * kv_itemsize
+    scores = B * K * G * slots * 4
+    return kv + scores
+
+
+def kernel_transient_bytes(B: int, page_size: int,
+                           K: int, G: int, hd: int,
+                           kv_itemsize: int,
+                           chunk: int = PAGES_PER_CHUNK) -> int:
+    """Fused page walk: one (B, chunk*ps, K, hd) k/v page-column
+    chunk, the fp32 (B, K, G, chunk*ps) score tile, and the
+    (m, l, acc) accumulator — independent of the bucket's table
+    width."""
+    slots = chunk * page_size
+    kv = 2 * B * slots * K * hd * kv_itemsize
+    scores = B * K * G * slots * 4
+    accum = B * K * G * (hd + 2) * 4
+    return kv + scores + accum

@@ -1,0 +1,148 @@
+"""Pallas paged-attention decode kernel: attend through the page table.
+
+One grid step per lane.  The kernel reads the lane's row of the page
+table and walks ONLY its ``ceil((pos+1)/page_size)`` allocated pages,
+folding each page's keys/values into a running flash-attention
+accumulator ``(m, l, acc)`` — the gathered contiguous
+``(B, max_pages * page_size, K, hd)`` cache that ``common.gather_pages``
+materializes never exists.  A short lane in a bucket whose anchor
+request pinned a wide page table does attention work proportional to
+its OWN length, not the bucket max: the transient per step is one
+``(page_size, K, hd)`` page plus the ``(K, G, page_size)`` score tile.
+
+Index math (mirrors serve/paging.py's layout):
+
+  logical slot s of lane b  ->  pool[page_table[b, s // ps], s % ps]
+  pages to walk             ->  n = min(pos // ps + 1, max_pages)
+  slot validity in page i   ->  (i * ps + arange(ps) <= pos)
+                                 & (page_table[b, i] > 0)
+
+Page-table entries are ``-1`` when unallocated and ``0`` is the
+reserved trash page (serve/paging.py ``TRASH_PAGE``); both are invalid
+for reads, so validity is ``entry > 0``.  Invalid slots get a
+``NEG_INF`` score (softmax weight 0) AND their value rows are zeroed
+with ``jnp.where`` before the weighted sum — a NaN/inf-poisoned trash
+page must not leak through ``0 * NaN`` (locked by the poisoned-pool
+test in tests/test_serve_paged.py).
+
+Online-softmax update per page (all fp32):
+
+  m' = max(m, max_s)          r = exp(m - m')
+  p  = exp(s - m')            l' = l * r + sum(p)
+  acc' = acc * r + p @ v      out = acc / l      (l >= 1 for live lanes)
+
+A fully-masked lane (dead: every entry <= 0) keeps ``l == 0``; the
+epilogue divides by ``max(l, 1)`` so its output is exact zeros —
+garbage-but-finite, same contract as the gather oracle, and the serve
+loop discards dead lanes' tokens anyway.
+
+The per-lane math is kept term-for-term identical to the ``jnp`` walk
+in ops.py (same einsums, same fp32 promotion points), so interpret-mode
+runs are bit-comparable against it; the gather + ``common.attention``
+oracle differs in reduction ORDER (full-row softmax, probs cast to the
+value dtype before the weighted sum), so kernel-vs-oracle equality is
+asserted at allclose / greedy-token level, not float-bit level.
+
+Like the other kernels in this package family the pool is handed to the
+kernel whole (one BlockSpec covering the full array); at real TPU pool
+sizes this would want ANY-memory residency + per-page DMA, which is why
+the compiled path stays behind ops.py's eager probe.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30  # finite, matches common.NEG_INF: masked != NaN
+
+
+def _paged_attn_kernel(q_ref, pt_ref, pos_ref, pk_ref, pv_ref, o_ref, *,
+                       page_size: int, chunk: int):
+    H, hd = q_ref.shape[1], q_ref.shape[2]
+    K = pk_ref.shape[2]
+    G = H // K
+    max_pages = pt_ref.shape[1]          # padded to a multiple of chunk
+
+    # scale in the input dtype, exactly like the oracle's
+    # q.reshape(...) * hd**-0.5 (common.attention)
+    qg = (q_ref[0] * (hd ** -0.5)).reshape(K, G, hd)
+    pos = pos_ref[0, 0]
+    n_pages = jnp.minimum(pos // page_size + 1, max_pages)
+    n_chunks = (n_pages + chunk - 1) // chunk
+    slot = jnp.arange(chunk * page_size)         # slot offset in chunk
+
+    def body(t, carry):
+        m, l, acc = carry
+        first = t * chunk
+        entries = pl.load(pt_ref, (pl.ds(0, 1), pl.ds(first, chunk)))[0]
+        pids = jnp.maximum(entries, 0)
+        # scattered page ids: one static slice per chunk member
+        ks, vs = [], []
+        for j in range(chunk):
+            page = (pl.ds(pids[j], 1), slice(None), slice(None),
+                    slice(None))
+            ks.append(pl.load(pk_ref, page)[0])
+            vs.append(pl.load(pv_ref, page)[0])
+        k = jnp.concatenate(ks, axis=0)          # (chunk*ps, K, hd)
+        v = jnp.concatenate(vs, axis=0)
+        valid = (first * page_size + slot <= pos) \
+            & (entries[slot // page_size] > 0)
+        s = jnp.einsum("kgh,skh->kgs", qg, k,
+                       preferred_element_type=jnp.float32)
+        s = jnp.where(valid[None, None, :], s, NEG_INF)
+        v = jnp.where(valid[:, None, None], v, jnp.zeros((), v.dtype))
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        r = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * r + p.sum(axis=-1)
+        acc = acc * r[..., None] + jnp.einsum(
+            "kgs,skh->kgh", p, v.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        return m_new, l, acc
+
+    m0 = jnp.full((K, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((K, G), jnp.float32)
+    a0 = jnp.zeros((K, G, hd), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_chunks, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1.0)[..., None]
+    o_ref[0] = out.reshape(H, hd).astype(o_ref.dtype)
+
+
+def paged_attention(q: jax.Array,          # (B, H, hd) decode query
+                    pk: jax.Array,         # (P, ps, K, hd) shared pool
+                    pv: jax.Array,
+                    page_table: jax.Array,  # (B, max_pages) int32,
+                                            # max_pages % chunk == 0
+                    pos: jax.Array,         # (B,) int32 decode positions
+                    *, chunk: int = 1, interpret: bool = True) -> jax.Array:
+    """Fused paged GQA decode attention.  Returns (B, H, hd) in q.dtype.
+
+    ``chunk`` pages fold into the accumulator per loop step (ops.py
+    pads the table so it divides ``max_pages``): the per-iteration
+    einsum grows, the trip count shrinks — the accumulator sequence is
+    unchanged up to exact no-op pages, so any chunk size is
+    bit-identical to the matching jnp walk."""
+    B, H, hd = q.shape
+    P, ps, K, _ = pk.shape
+    max_pages = page_table.shape[1]
+    assert H % K == 0, (H, K)
+    assert max_pages % chunk == 0, (max_pages, chunk)
+    pos2d = pos.astype(jnp.int32).reshape(B, 1)
+    pool_spec = pl.BlockSpec((P, ps, K, hd), lambda b: (0, 0, 0, 0))
+    return pl.pallas_call(
+        partial(_paged_attn_kernel, page_size=ps, chunk=chunk),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, max_pages), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            pool_spec,
+            pool_spec,
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(q, page_table.astype(jnp.int32), pos2d, pk, pv)

@@ -280,11 +280,21 @@ def gather_pages(pool_leaf: jax.Array, page_table: jax.Array) -> jax.Array:
     logical position ``r`` — exactly the contiguous cache layout —
     so the existing per-sequence ``kv_valid_len`` masks apply
     unchanged (positions ``>= pos+1`` are masked, which covers every
-    row of an unallocated page).  Unallocated entries clamp to the
-    trash page; their values are garbage but finite and always masked.
+    row of an unallocated page).  Unallocated/trash entries
+    (``page_table <= 0``) are replaced with exact zeros: the softmax
+    mask gives them probability 0, but a zero probability times a NaN
+    or inf value row would still be NaN in the weighted sum, so the
+    "garbage but finite, always masked" contract requires sanitizing
+    the values themselves, not just the scores (locked by the
+    poisoned-trash-page test in tests/test_serve_paged.py).  The
+    ``jnp.where`` (never a multiplicative mask — ``0 * nan`` is nan)
+    is bit-transparent for finite garbage.
     """
     gathered = pool_leaf[jnp.maximum(page_table, 0)]   # (B, MP, ps, K, hd)
     b, mp, ps = gathered.shape[:3]
+    valid = (page_table > 0).reshape(
+        b, mp, *([1] * (gathered.ndim - 2)))
+    gathered = jnp.where(valid, gathered, jnp.zeros((), gathered.dtype))
     return gathered.reshape(b, mp * ps, *pool_leaf.shape[2:])
 
 

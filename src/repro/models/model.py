@@ -106,14 +106,17 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
 
 
 def decode_step_paged(cfg: ModelConfig, params, pool, page_table, tokens,
-                      pos, *, kv_kbits: int | None = None, write_mask=None):
+                      pos, *, kv_kbits: int | None = None, write_mask=None,
+                      paged_kernel: bool = False):
     """One decode step against a paged KV pool (see serve/paging.py).
     ``pos`` is always (B,); ``write_mask`` (B,) bool routes dead lanes'
-    cache writes to the trash page.  Only valid when
-    :func:`supports_paged`."""
+    cache writes to the trash page.  ``paged_kernel`` swaps the gather
+    oracle for the fused page-walk read (kernels/paged_attn).  Only
+    valid when :func:`supports_paged`."""
     assert supports_paged(cfg), f"{cfg.name}: family does not page"
     return transformer.decode_step_paged(cfg, params, pool, page_table,
-                                         tokens, pos, kv_kbits, write_mask)
+                                         tokens, pos, kv_kbits, write_mask,
+                                         paged_kernel)
 
 
 def supports_paged(cfg: ModelConfig) -> bool:

@@ -221,7 +221,7 @@ def _attn_decode(x, ap, cfg: ModelConfig, cache, pos, kv_kbits=None):
 
 
 def _attn_decode_paged(x, ap, cfg: ModelConfig, pc, page_table, pos,
-                       kv_kbits=None, write_mask=None):
+                       kv_kbits=None, write_mask=None, paged_kernel=False):
     """One-token attention against a *paged* KV pool.  x: (B, 1, D).
 
     ``pc`` holds the layer's shared pools ``{"k","v"}: (P, ps, K, hd)``;
@@ -229,17 +229,21 @@ def _attn_decode_paged(x, ap, cfg: ModelConfig, pc, page_table, pos,
     the pool (see serve/paging.py).  ``pos`` is always a (B,) vector —
     the paged engine is ragged by construction.  The write lands at
     ``pool[page_table[b, pos//ps], pos % ps]``; lanes outside
-    ``write_mask`` (dead lanes waiting for admission) are routed to the
-    reserved trash page 0, so a freed-and-reused page can never be
-    corrupted.  The read gathers the lane's pages back into contiguous
-    logical order (``gather_pages``) and masks with the same
-    per-sequence ``kv_valid_len`` as the contiguous path — per-row
-    values and mask prefix are identical, which is what keeps paged
-    decode bit-identical to the contiguous engine (locked by
-    tests/test_serve_paged.py).  ``kv_kbits`` fake-quantizes the
-    written slot at the same slot granularity as the contiguous path
-    (one scale per (K, hd) row — the byte *accounting* is per page,
-    the numerics per slot, so parity survives FRAC).
+    ``write_mask`` (dead lanes waiting for admission) AND lanes whose
+    position has outrun their page table (``pos // ps >= max_pages`` —
+    an engine bug, but it must fail safe) are routed to the reserved
+    trash page 0, so a live page can never be corrupted.  The read
+    either gathers the lane's pages back into contiguous logical order
+    (``gather_pages``, the oracle) and masks with the same per-sequence
+    ``kv_valid_len`` as the contiguous path, or — with
+    ``paged_kernel=True`` — walks the page table in place through the
+    fused kernel (kernels/paged_attn), which never materializes the
+    gathered cache; both keep paged decode token-identical to the
+    contiguous engine (locked by tests/test_serve_paged.py).
+    ``kv_kbits`` fake-quantizes the written slot at the same slot
+    granularity as the contiguous path (one scale per (K, hd) row —
+    the byte *accounting* is per page, the numerics per slot, so
+    parity survives FRAC).
     """
     q = jnp.einsum("bsd,dhk->bshk", x, ap["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, ap["wk"])
@@ -255,20 +259,32 @@ def _attn_decode_paged(x, ap, cfg: ModelConfig, pc, page_table, pos,
         v = fops.fake_quant_slots(v, kv_kbits, row_dims=2)
     ps = pc["k"].shape[1]
     b = x.shape[0]
-    cols = jnp.clip(pos // ps, 0, page_table.shape[1] - 1)
+    mp = page_table.shape[1]
+    cols_raw = pos // ps
+    cols = jnp.clip(cols_raw, 0, mp - 1)
     pidx = page_table[jnp.arange(b), cols]                 # (B,)
-    ok = pidx > 0
+    # an out-of-table position must NOT clamp into the last allocated
+    # page (that would overwrite a live slot in place) — route it to
+    # the trash page exactly like a dead lane
+    ok = (pidx > 0) & (cols_raw < mp)
     if write_mask is not None:
         ok = ok & write_mask
     pidx = jnp.where(ok, pidx, 0)                          # trash page
     off = pos % ps
     pk = pc["k"].at[pidx, off].set(k[:, 0])
     pv = pc["v"].at[pidx, off].set(v[:, 0])
-    kb = gather_pages(pk, page_table)
-    vb = gather_pages(pv, page_table)
-    out = attention(
-        q, kb, vb, causal=False, kv_valid_len=pos + 1, q_positions=ppos
-    )
+    if paged_kernel:
+        from repro.kernels.paged_attn import ops as pops
+
+        out = pops.paged_attention(q[:, 0], pk, pv, page_table,
+                                   pos)[:, None]
+    else:
+        kb = gather_pages(pk, page_table)
+        vb = gather_pages(pv, page_table)
+        out = attention(
+            q, kb, vb, causal=False, kv_valid_len=pos + 1,
+            q_positions=ppos
+        )
     out = jnp.einsum("bshk,hkd->bsd", out, ap["wo"])
     return out, {"k": pk, "v": pv}
 
@@ -379,7 +395,7 @@ def block_decode(x, bp, bc, cfg: ModelConfig, pos, kv_kbits=None):
 
 
 def block_decode_paged(x, bp, pc, cfg: ModelConfig, page_table, pos,
-                       kv_kbits=None, write_mask=None):
+                       kv_kbits=None, write_mask=None, paged_kernel=False):
     """One token through one period block against paged pools.
     Only pure-attention blocks page (model.supports_paged)."""
     new_pc: dict[str, Any] = {}
@@ -388,7 +404,7 @@ def block_decode_paged(x, bp, pc, cfg: ModelConfig, page_table, pos,
         h = rms_norm(x, bp[f"norm1_{j}"])
         mixed, c = _attn_decode_paged(
             h, bp[f"attn_{j}"], cfg, {"k": pc[f"k_{j}"], "v": pc[f"v_{j}"]},
-            page_table, pos, kv_kbits, write_mask,
+            page_table, pos, kv_kbits, write_mask, paged_kernel,
         )
         new_pc[f"k_{j}"], new_pc[f"v_{j}"] = c["k"], c["v"]
         if cfg.parallel_block:
@@ -507,18 +523,21 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos, kv_kbits=None):
 
 
 def decode_step_paged(cfg: ModelConfig, params, pool, page_table, tokens,
-                      pos, kv_kbits=None, write_mask=None):
+                      pos, kv_kbits=None, write_mask=None,
+                      paged_kernel=False):
     """tokens: (B,) int32; pos: (B,) int32 per-sequence positions;
     ``pool``: per-layer paged KV pools (stacked over period blocks like
     the contiguous cache, leaves (n_periods, P, ps, K, hd));
     ``page_table``: (B, max_pages), one table for every layer (the
-    whole stack grows in lockstep).  Returns (logits, pool)."""
+    whole stack grows in lockstep).  ``paged_kernel`` reads through the
+    fused page-walk kernel instead of the gather oracle (see
+    kernels/paged_attn).  Returns (logits, pool)."""
     x = params["embed"][tokens][:, None, :]                 # (B, 1, D)
 
     def body(x, bp_pc):
         bp, pc = bp_pc
         return block_decode_paged(x, bp, pc, cfg, page_table, pos,
-                                  kv_kbits, write_mask)
+                                  kv_kbits, write_mask, paged_kernel)
 
     x, new_pool = lax.scan(body, x, (params["layers"], pool))
     x = rms_norm(x, params["final_norm"])

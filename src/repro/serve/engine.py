@@ -86,6 +86,7 @@ budget by more than the loop granularity.  Timeouts are counted in
 """
 from __future__ import annotations
 
+import os
 import time
 import warnings
 from dataclasses import dataclass, field
@@ -135,6 +136,12 @@ class ServeStats:
                                     # (paged: the pow2-rounded pool)
     kv_pages_peak: int = 0          # paged: max pages live at once
     admissions: int = 0             # paged: in-loop slot refills
+    attn_transient_peak: int = 0    # paged: modeled peak per-layer
+                                    # attention-read transient bytes per
+                                    # decode step (gather pays the
+                                    # bucket-max table width, the fused
+                                    # kernel one page column — see
+                                    # kernels/paged_attn/ops.py)
     timeouts: int = 0               # requests expired by max_wall_s
     oversub_waves: int = 0          # flash mode: waves decoded
     spills: int = 0                 # flash mode: pool pages evicted
@@ -202,7 +209,7 @@ def build_decode_loop(mcfg: ModelConfig, *, eos_id: int | None = None,
 
 def build_paged_decode_loop(mcfg: ModelConfig, *, eos_id: int | None = None,
                             kv_kbits: int | None = None, out_cap: int = 1,
-                            page_size: int = 16):
+                            page_size: int = 16, paged_kernel: bool = False):
     """Jitted paged decode with in-loop admission (the super-bucket).
 
     Returns ``loop(params, pool, page_table, free_stack, free_top,
@@ -313,7 +320,8 @@ def build_paged_decode_loop(mcfg: ModelConfig, *, eos_id: int | None = None,
             # 2. one token for every lane
             logits, pool = model.decode_step_paged(
                 mcfg, params, c["pool"], pt, c["tok"], c["pos"],
-                kv_kbits=kv_kbits, write_mask=c["alive"])
+                kv_kbits=kv_kbits, write_mask=c["alive"],
+                paged_kernel=paged_kernel)
             nxt = greedy_sample(logits)
             # 3. emit into the lane's *request* row
             rr = jnp.where(c["alive"], c["lane"], R)
@@ -347,7 +355,8 @@ class ServeEngine:
                  kv_frac_kbits: int | None = None,
                  meter: SustainabilityMeter | None = None,
                  mesh=None, paged: bool = False, page_size: int = 16,
-                 stage_depth: int = 16, flash=None):
+                 stage_depth: int = 16, flash=None,
+                 paged_kernel: bool | None = None):
         self.mcfg = mcfg
         self.max_batch = max_batch
         self.eos_id = eos_id
@@ -368,6 +377,23 @@ class ServeEngine:
                 "slots); falling back to the contiguous layout — outputs "
                 "are identical, the paged byte model does not apply.",
                 UserWarning, stacklevel=2)
+        # fused page-walk attention (kernels/paged_attn) instead of the
+        # gather_pages read.  None defers to REPRO_PAGED_KERNEL — the
+        # operational escape hatch, same contract as REPRO_FRAC_MODE —
+        # then defaults off (the gather oracle stays the shipping path).
+        if paged_kernel is None:
+            env = os.environ.get("REPRO_PAGED_KERNEL")
+            if env is None:
+                paged_kernel = False
+            elif env.lower() in ("1", "true", "on"):
+                paged_kernel = True
+            elif env.lower() in ("0", "false", "off"):
+                paged_kernel = False
+            else:
+                raise ValueError(
+                    f"REPRO_PAGED_KERNEL={env!r}: expected one of "
+                    "1|true|on|0|false|off")
+        self.paged_kernel = bool(paged_kernel) and self.paged
         if flash is not None:
             if not self.paged:
                 raise ValueError(
@@ -742,6 +768,7 @@ class ServeEngine:
         self._note_steps(now - t_first, int(steps_np))
         self.stats.admissions += int(adm_np)
         assert int(adm_np) == staged_n, "stage queue not drained in-loop"
+        self._note_attn_transient(nb, plan.page_table.shape[1])
         page_full_b, page_frac_b = self._page_bytes()
         self.stats.kv_pages_peak = max(self.stats.kv_pages_peak,
                                        int(peak_np))
@@ -1008,6 +1035,7 @@ class ServeEngine:
         self._note_steps(now - t_wave0, int(steps_np))
         assert int(adm_np) == 0
         self.stats.oversub_waves += 1
+        self._note_attn_transient(len(wreqs), plan.page_table.shape[1])
         page_full_b, page_frac_b = self._page_bytes()
         self.stats.kv_pages_peak = max(self.stats.kv_pages_peak,
                                        int(peak_np))
@@ -1042,12 +1070,34 @@ class ServeEngine:
         return full, frac
 
     def _get_paged_loop(self, out_cap: int):
-        key = ("paged", out_cap)
+        key = ("paged", out_cap, self.paged_kernel)
         if key not in self._loops:
             self._loops[key] = build_paged_decode_loop(
                 self.mcfg, eos_id=self.eos_id, kv_kbits=self.kv_frac_kbits,
-                out_cap=out_cap, page_size=self.page_size)
+                out_cap=out_cap, page_size=self.page_size,
+                paged_kernel=self.paged_kernel)
         return self._loops[key]
+
+    def _note_attn_transient(self, nb: int, max_pages: int) -> None:
+        """Stamp the modeled peak attention-read transient of this
+        bucket's decode steps (kernels/paged_attn/ops.py byte model) —
+        what the CI bench gate compares between the gather and fused
+        read paths."""
+        from repro.kernels.paged_attn import ops as pops
+
+        cfg = self.mcfg
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+        G = cfg.num_heads // K
+        item = 2 if cfg.dtype in ("bfloat16", "float16") else 4
+        if self.paged_kernel:
+            b = pops.kernel_transient_bytes(
+                nb, self.page_size, K, G, hd, item,
+                chunk=min(pops.PAGES_PER_CHUNK, max_pages))
+        else:
+            b = pops.gather_transient_bytes(nb, max_pages, self.page_size,
+                                            K, G, hd, item)
+        self.stats.attn_transient_peak = max(
+            self.stats.attn_transient_peak, b)
 
     # -- pieces --------------------------------------------------------------
     def _prefill_fn(self, params, batch, lengths):

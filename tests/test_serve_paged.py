@@ -396,3 +396,190 @@ def test_paged_solo_degenerates_to_single_lane():
                          paged=True, page_size=4)
     assert got == ref
     assert eng.stats.admissions == 0 and eng.stats.host_syncs == 1
+
+
+# ---------------------------------------------------------------------------
+# 5. fused paged-attention kernel: kernel == gather oracle == contiguous
+# ---------------------------------------------------------------------------
+
+
+def _rand_paged_fixture(seed, B, ps, dtype=jnp.float32):
+    """Random pool + valid page tables + ragged positions: every lane's
+    allocated prefix covers its own ``pos`` (the invariant the engine's
+    allocator maintains), page ids distinct across lanes, -1 tails."""
+    rng = np.random.default_rng(seed)
+    mp = int(rng.integers(2, 6))
+    H, K, hd = 4, 2, 8
+    P = B * mp + 1                               # + trash page 0
+    q = jnp.asarray(rng.standard_normal((B, H, hd)), dtype)
+    pk = jnp.asarray(rng.standard_normal((P, ps, K, hd)), dtype)
+    pv = jnp.asarray(rng.standard_normal((P, ps, K, hd)), dtype)
+    ids = rng.permutation(np.arange(1, P))
+    table = np.full((B, mp), -1, np.int32)
+    pos = np.zeros((B,), np.int32)
+    used = 0
+    for b in range(B):
+        n_alloc = int(rng.integers(1, mp + 1))
+        table[b, :n_alloc] = ids[used:used + n_alloc]
+        used += n_alloc
+        pos[b] = int(rng.integers(0, n_alloc * ps))
+    return q, pk, pv, jnp.asarray(table), jnp.asarray(pos)
+
+
+def _oracle_attn(q, pk, pv, table, pos):
+    from repro.models.common import attention, gather_pages
+
+    kb, vb = gather_pages(pk, table), gather_pages(pv, table)
+    return attention(q[:, None], kb, vb, causal=False,
+                     kv_valid_len=pos + 1, q_positions=pos[:, None])[:, 0]
+
+
+def test_paged_attn_modes_agree_and_match_oracle():
+    """The jnp page walk and the Pallas kernel (interpret) are
+    bit-identical to each other — same per-page fp32 math — and agree
+    with the gather + common.attention oracle to rounding (the oracle
+    reduces in a different order; see kernels/paged_attn)."""
+    from repro.kernels.paged_attn import ops as pops
+
+    q, pk, pv, table, pos = _rand_paged_fixture(0, B=3, ps=4)
+    o_jnp = pops.paged_attention(q, pk, pv, table, pos, mode="jnp")
+    o_int = pops.paged_attention(q, pk, pv, table, pos,
+                                 mode="pallas_interpret")
+    assert jnp.array_equal(o_jnp, o_int)
+    oracle = _oracle_attn(q, pk, pv, table, pos)
+    np.testing.assert_allclose(np.asarray(o_jnp), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-6)
+    with pytest.raises(ValueError, match="expected one of"):
+        pops.paged_attention(q, pk, pv, table, pos, mode="cuda")
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10**6), st.sampled_from([2, 4]),
+       st.integers(1, 3))
+def test_paged_attn_property_vs_oracle(seed, ps, B):
+    """Property lock over random valid page tables / ragged positions:
+    fused walk == gather oracle (rounding), jnp == interpret (bits)."""
+    from repro.kernels.paged_attn import ops as pops
+
+    q, pk, pv, table, pos = _rand_paged_fixture(seed, B=B, ps=ps)
+    o_jnp = pops.paged_attention(q, pk, pv, table, pos, mode="jnp")
+    o_int = pops.paged_attention(q, pk, pv, table, pos,
+                                 mode="pallas_interpret")
+    assert jnp.array_equal(o_jnp, o_int)
+    oracle = _oracle_attn(q, pk, pv, table, pos)
+    np.testing.assert_allclose(np.asarray(o_jnp), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("ps", [2, 4, 16])
+def test_trash_page_poison_is_masked(ps):
+    """gather_pages documents unallocated entries as "garbage but
+    finite, always masked" — lock it adversarially: a NaN/inf-poisoned
+    trash page must leave both the gather path and the fused kernel
+    bit-identical to the clean pool (a multiplicative mask would leak
+    NaN through 0 * nan)."""
+    from repro.kernels.paged_attn import ops as pops
+
+    q, pk, pv, table, pos = _rand_paged_fixture(7, B=3, ps=ps)
+    clean = {m: pops.paged_attention(q, pk, pv, table, pos, mode=m)
+             for m in ("jnp", "pallas_interpret")}
+    clean_g = _oracle_attn(q, pk, pv, table, pos)
+    pk_p = pk.at[0].set(jnp.nan)
+    pv_p = pv.at[0].set(jnp.inf)
+    for m, ref in clean.items():
+        got = pops.paged_attention(q, pk_p, pv_p, table, pos, mode=m)
+        assert jnp.array_equal(got, ref), f"poison leaked through {m}"
+    got_g = _oracle_attn(q, pk_p, pv_p, table, pos)
+    assert jnp.array_equal(got_g, clean_g), "poison leaked through gather"
+
+
+def test_paged_write_overflow_routes_to_trash():
+    """A lane whose position has outrun its page table must write to
+    the reserved trash page, NOT clamp into its last allocated page
+    (the pre-fix behavior silently corrupted the final page in place)."""
+    mcfg = get_tiny(ARCH)
+    params = _params()
+    ps, n_pages, mp = 4, 8, 2
+    rng = np.random.default_rng(3)
+    specs = model.paged_pool_specs(mcfg, n_pages, ps)
+    from repro.models.common import is_leaf_spec
+
+    pool = jax.tree.map(
+        lambda s: jnp.asarray(rng.standard_normal(s.shape), jnp.bfloat16),
+        specs, is_leaf=is_leaf_spec)
+    table = jnp.asarray([[1, 2]], jnp.int32)
+    pos = jnp.asarray([mp * ps], jnp.int32)       # one past capacity
+    tok = jnp.asarray([5], jnp.int32)
+    for kernel in (False, True):
+        logits, new_pool = model.decode_step_paged(
+            mcfg, params, pool, table, tok, pos, paged_kernel=kernel)
+        assert bool(jnp.isfinite(logits).all())
+        for name in jax.tree.leaves(
+                jax.tree.map(lambda a, b: jnp.array_equal(a[:, 1:], b[:, 1:]),
+                             pool, new_pool)):
+            assert bool(name), "overflow write corrupted a live page"
+
+
+@pytest.mark.parametrize("kbits", [None, 8])
+def test_paged_kernel_token_identical(kbits):
+    """Engine-level lock: the fused kernel reproduces the gather-oracle
+    paged engine and solo serving token-for-token, ± FRAC KV.  The
+    long prompt anchors a table wider than the walk's chunk, so the
+    modeled attention transient (the byte model the CI bench gates)
+    must come out strictly lower for the fused read."""
+    mcfg = get_tiny(ARCH)
+    params = _params()
+    prompts = [np.arange(1, 25, dtype=np.int32)] + PROMPTS
+    max_new = [8] + MAX_NEW
+    kw = dict(max_batch=4, kv_frac_kbits=kbits, paged=True, page_size=4)
+    gather_eng, res_g = _serve(mcfg, params, prompts, max_new, **kw)
+    kernel_eng, res_k = _serve(mcfg, params, prompts, max_new,
+                               paged_kernel=True, **kw)
+    assert kernel_eng.paged_kernel
+    assert res_k == res_g, f"kernel vs gather diverged (kbits={kbits})"
+    _, (ref,) = _serve(mcfg, params, [prompts[0]], [max_new[0]],
+                       max_batch=1, kv_frac_kbits=kbits)
+    assert res_k[0] == ref
+    # the byte model the CI bench gates: fused read < gather read
+    assert (kernel_eng.stats.attn_transient_peak
+            < gather_eng.stats.attn_transient_peak)
+
+
+def test_paged_kernel_page_size_invariance():
+    mcfg = get_tiny(ARCH)
+    params = _params()
+    outs = [_serve(mcfg, params, PROMPTS, MAX_NEW, max_batch=4, paged=True,
+                   page_size=ps, paged_kernel=True)[1]
+            for ps in (2, 4, 16)]
+    assert outs[0] == outs[1] == outs[2]
+
+
+def test_paged_kernel_flash_waves_identical():
+    """Oversubscribed flash waves ride the same jitted loop — flipping
+    the kernel flag must not change a single token through spill and
+    fault-in."""
+    mcfg = get_tiny(ARCH)
+    params = _params()
+    kw = dict(max_batch=2, paged=True, page_size=4, stage_depth=8)
+    _, res_b = _serve(mcfg, params, OVERSUB_PROMPTS, OVERSUB_MAX_NEW,
+                      flash=_tier(), **kw)
+    eng, res_k = _serve(mcfg, params, OVERSUB_PROMPTS, OVERSUB_MAX_NEW,
+                        flash=_tier(), paged_kernel=True, **kw)
+    assert res_k == res_b
+    assert eng.stats.oversub_waves >= 2 and eng.stats.spills > 0
+
+
+def test_paged_kernel_env_override(monkeypatch):
+    mcfg = get_tiny(ARCH)
+    params = _params()
+    monkeypatch.setenv("REPRO_PAGED_KERNEL", "1")
+    assert ServeEngine(mcfg, params, paged=True).paged_kernel
+    monkeypatch.setenv("REPRO_PAGED_KERNEL", "off")
+    assert not ServeEngine(mcfg, params, paged=True).paged_kernel
+    monkeypatch.setenv("REPRO_PAGED_KERNEL", "maybe")
+    with pytest.raises(ValueError, match="REPRO_PAGED_KERNEL"):
+        ServeEngine(mcfg, params, paged=True)
+    monkeypatch.delenv("REPRO_PAGED_KERNEL")
+    # explicit argument wins over the default; contiguous engines never
+    # set the flag (there is no page table to walk)
+    assert not ServeEngine(mcfg, params, paged_kernel=True).paged_kernel
